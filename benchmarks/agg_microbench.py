@@ -1,0 +1,113 @@
+"""Aggregation-rule microbenchmark (the paper's complexity table,
+Section IV): wall-time per aggregation call vs (K, d), for every rule,
+plus the Pallas kernel paths (interpret mode on CPU — correctness-grade
+timing, the TPU number comes from the roofline).
+
+The derived column reports bytes touched per call / wall time = effective
+CPU bandwidth, a sanity proxy for the O(dK log K) complexity claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg_lib
+from repro.core import wfagg as wf
+
+
+def _timeit(fn, *args, reps: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_rules(K: int, d: int) -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    updates = jax.random.normal(key, (K, d), jnp.float32)
+    local = updates[0]
+    rows = []
+
+    cases = {
+        "mean": jax.jit(lambda u: agg_lib.mean_agg(u)[0]),
+        "median": jax.jit(lambda u: agg_lib.median_agg(u)[0]),
+        "trimmed_mean": jax.jit(lambda u: agg_lib.trimmed_mean_agg(u)[0]),
+        "krum": jax.jit(lambda u: agg_lib.krum_agg(u)[0]),
+        "multi_krum": jax.jit(lambda u: agg_lib.multi_krum_agg(u)[0]),
+        "clustering": jax.jit(lambda u: agg_lib.clustering_agg(u)[0]),
+        "wfagg_d": jax.jit(lambda u: wf.wfagg_d_agg(u)[0]),
+        "wfagg_c": jax.jit(lambda u: wf.wfagg_c_agg(u)[0]),
+        "wfagg_e": jax.jit(lambda u: wf.wfagg_e_agg(local, u)),
+    }
+    for name, fn in cases.items():
+        us = _timeit(fn, updates) * 1e6
+        rows.append({
+            "rule": name, "K": K, "d": d, "us_per_call": round(us, 1),
+            "GBps": round(4e-3 * K * d / max(us, 1e-9), 2),
+        })
+
+    # full WFAgg (3 filters + weighting + smoothing)
+    wcfg = wf.WFAggConfig()
+    tstate = wf.init_temporal_state(K, d, wcfg.window)
+    fn = jax.jit(lambda loc, u, ts: wf.wfagg(loc, u, ts, wcfg)[0])
+    us = _timeit(fn, local, updates, tstate) * 1e6
+    rows.append({"rule": "wfagg", "K": K, "d": d, "us_per_call": round(us, 1),
+                 "GBps": round(4e-3 * K * d / max(us, 1e-9), 2)})
+    return rows
+
+
+def bench_kernels(K: int, d: int) -> List[Dict]:
+    from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
+    from repro.kernels.robust_stats.ops import robust_stats
+    from repro.kernels.weighted_agg.ops import weighted_agg
+
+    key = jax.random.PRNGKey(1)
+    updates = jax.random.normal(key, (K, d), jnp.float32)
+    local = updates[0]
+    weights = jnp.ones((K,), jnp.float32)
+    rows = []
+    for name, fn in (
+        ("robust_stats[pallas-interp]", lambda: robust_stats(updates)),
+        ("robust_stats[jnp-ref]", lambda: robust_stats(updates, use_kernel=False)),
+        ("pairwise[pallas-interp]", lambda: pairwise_sq_dists(updates)),
+        ("pairwise[jnp-ref]", lambda: pairwise_sq_dists(updates, use_kernel=False)),
+        ("weighted_agg[pallas-interp]", lambda: weighted_agg(local, updates, weights)),
+        ("weighted_agg[jnp-ref]", lambda: weighted_agg(local, updates, weights, use_kernel=False)),
+    ):
+        us = _timeit(fn, reps=3) * 1e6
+        rows.append({"rule": name, "K": K, "d": d, "us_per_call": round(us, 1),
+                     "GBps": round(4e-3 * K * d / max(us, 1e-9), 2)})
+    return rows
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="8x100000,16x100000,16x1000000")
+    ap.add_argument("--kernels", action="store_true", help="include Pallas paths")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    rows: List[Dict] = []
+    for tok in args.sizes.split(","):
+        K, d = (int(x) for x in tok.split("x"))
+        rows += bench_rules(K, d)
+        if args.kernels:
+            rows += bench_kernels(K, min(d, 200_000))
+    for r in rows:
+        print(f"{r['rule']:28s} K={r['K']:3d} d={r['d']:8d} "
+              f"{r['us_per_call']:10.1f} us  {r['GBps']:7.2f} GB/s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

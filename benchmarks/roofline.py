@@ -1,0 +1,123 @@
+"""Roofline report: reads the dry-run artifacts (benchmarks/artifacts/)
+and renders the per-(arch x shape x mesh) table for EXPERIMENTS.md
+Section Roofline — three terms, dominant bottleneck, MODEL_FLOPS ratio,
+HBM fit, and a one-line remediation note per row.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+_NOTES = {
+    ("collective", True): "overlap/shard the robust-agg gather (ring schedule, TP-sharded flat gradient)",
+    ("collective", False): "reduce cross-device traffic: keep gradient TP-sharded through aggregation",
+    ("memory", True): "cut HBM traffic: chunked attention / fused robust-stats pass",
+    ("memory", False): "cut HBM traffic AND capacity: chunked attention, bf16 stats, sharded flat gradient",
+    ("compute", True): "compute-bound: good; raise MFU via larger per-chip tiles",
+    ("compute", False): "compute-bound but over HBM capacity: reshard weights",
+}
+
+
+def load(tag: str = "") -> List[Dict]:
+    """Artifact names are {arch}.{shape}.{single|multi}[.{tag}].json (arch
+    ids themselves contain dots, so match the structured suffix)."""
+    recs = []
+    if tag:
+        pat = f"*.{tag}.json"
+    else:
+        pat = "*.json"
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pat))):
+        base = os.path.basename(path)
+        parts = base[: -len(".json")].rsplit(".", 2)
+        if tag:
+            ok = len(parts) == 3 and parts[1] in ("single", "multi") and parts[2] == tag
+        else:
+            ok = parts[-1] in ("single", "multi")
+        if not ok:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.1f}ms"
+    return f"{x * 1e6:6.1f}us"
+
+
+def render(recs: List[Dict], mesh: Optional[str] = "16x16") -> str:
+    lines = [
+        "| arch | shape | mode | compute | memory | collective | dominant | "
+        "useful-FLOPs | HBM/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                         f"SKIP: {r['reason'][:48]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | ERROR | | | | | | |")
+            continue
+        ro, mem = r["roofline"], r["memory"]
+        mode = r["mode"].get("mode", "?") if isinstance(r["mode"], dict) else r["mode"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mode} | {fmt_s(ro['compute_s'])} | "
+            f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+            f"**{ro['dominant']}** | {ro['useful_flops_ratio']:.3f} | "
+            f"{mem['peak_bytes'] / 1e9:.1f}GB | {'Y' if mem['fits'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r["status"] == "ok"]
+    worst_frac = None
+    most_coll = None
+    for r in ok:
+        ro = r["roofline"]
+        frac = ro["compute_s"] / max(ro["step_s_lower_bound"], 1e-30)
+        r["_frac"] = frac
+        cshare = ro["collective_s"] / max(ro["step_s_lower_bound"], 1e-30)
+        r["_cshare"] = cshare
+        if worst_frac is None or frac < worst_frac["_frac"]:
+            worst_frac = r
+        if most_coll is None or cshare > most_coll["_cshare"]:
+            most_coll = r
+    return {
+        "n_ok": len(ok),
+        "n_skip": sum(1 for r in recs if r["status"] == "skipped"),
+        "n_err": sum(1 for r in recs if r["status"] not in ("ok", "skipped")),
+        "worst_roofline_fraction": (worst_frac["arch"], worst_frac["shape"])
+        if worst_frac else None,
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"])
+        if most_coll else None,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args(argv)
+    recs = load(args.tag)
+    mesh = None if args.all_meshes else args.mesh
+    print(render(recs, mesh))
+    print()
+    print(json.dumps(summarize([r for r in recs
+                                if not mesh or r.get("mesh") == mesh]), indent=1))
+
+
+if __name__ == "__main__":
+    main()

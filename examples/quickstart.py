@@ -1,0 +1,37 @@
+"""Quickstart: WFAgg vs plain Mean under a strong Byzantine attack.
+
+Runs the paper's 20-node decentralized federation (8-regular ring, 2
+Byzantine nodes) on the synthetic MNIST-shaped task, once with the
+non-robust Mean aggregator and once with WFAgg, under the IPM-100 attack
+— the attack that fully collapses the mean in the paper's Table I.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.topology import make_topology
+from repro.data.synthetic import SyntheticImages
+from repro.dfl.engine import DFLConfig, run_experiment
+
+
+def main() -> None:
+    topo = make_topology(n_nodes=20, degree=8, n_malicious=2, kind="ring",
+                         placement="close")
+    data = SyntheticImages()
+    print(f"topology: {topo.n_nodes} nodes, degree {topo.degree}, "
+          f"malicious: {list(map(int, topo.malicious.nonzero()[0]))}")
+
+    for agg in ("mean", "wfagg"):
+        cfg = DFLConfig(aggregator=agg, attack="ipm_100", model="mlp")
+        out = run_experiment(cfg, topo, data, rounds=6, eval_every=2)
+        print(f"\n=== aggregator: {agg}  (attack: IPM-100) ===")
+        for e in out["trace"]:
+            by = e["acc_by_malicious_neighbors"]
+            print(f"  round {e['round']:2d}  benign acc {100 * e['acc_benign_mean']:6.2f}%  "
+                  f"(0/1/2 m.n.: {100 * by[0]:.1f}/{100 * by[1]:.1f}/{100 * by[2]:.1f})  "
+                  f"R2 {e['r_squared']:7.4f}")
+
+    print("\nWFAgg holds accuracy where the mean collapses — the paper's "
+          "central claim (Table I, IPM-100 row).")
+
+
+if __name__ == "__main__":
+    main()

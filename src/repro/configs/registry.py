@@ -1,0 +1,48 @@
+"""Architecture registry: --arch <id> -> ArchConfig."""
+from __future__ import annotations
+
+from repro.configs import (
+    arctic_480b,
+    deepseek_v2_lite_16b,
+    falcon_mamba_7b,
+    lenet_mnist,
+    llava_next_34b,
+    moonshot_v1_16b_a3b,
+    qwen1_5_0_5b,
+    seamless_m4t_medium,
+    stablelm_3b,
+    yi_6b,
+    zamba2_1_2b,
+)
+from repro.configs.base import ArchConfig
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        moonshot_v1_16b_a3b,
+        stablelm_3b,
+        zamba2_1_2b,
+        arctic_480b,
+        deepseek_v2_lite_16b,
+        yi_6b,
+        seamless_m4t_medium,
+        falcon_mamba_7b,
+        qwen1_5_0_5b,
+        llava_next_34b,
+    )
+}
+
+PAPER_ARCH = lenet_mnist.CONFIG
+ALL_ARCHS = dict(ARCHS, **{PAPER_ARCH.name: PAPER_ARCH})
+
+
+def get_config(name: str) -> ArchConfig:
+    try:
+        return ALL_ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ALL_ARCHS)}") from None
+
+
+def assigned_archs() -> list[str]:
+    """The ten architectures assigned from the public pool (dry-run set)."""
+    return list(ARCHS)

@@ -1,0 +1,45 @@
+"""Core library: the paper's contribution (WFAgg) + SOTA baselines."""
+from repro.core.aggregators import (
+    AGGREGATORS,
+    clustering_agg,
+    clustering_select,
+    coordinate_median,
+    krum_agg,
+    krum_scores,
+    masked_mean,
+    mean_agg,
+    median_agg,
+    multi_krum_agg,
+    pairwise_sq_dists,
+    smallest_k_mask,
+    trimmed_mean_agg,
+)
+from repro.core.attacks import (
+    ATTACK_NAMES,
+    AttackConfig,
+    alie_attack,
+    apply_model_attack,
+    flip_labels,
+    ipm_attack,
+    noise_attack,
+    sign_flip_attack,
+)
+from repro.core.metrics import consensus_distance, cross_entropy, micro_accuracy, r_squared
+from repro.core.topology import Topology, make_topology, paper_topology
+# NOTE: the bare `wfagg` function is intentionally NOT re-exported here --
+# it would shadow the `repro.core.wfagg` submodule attribute.  Use
+# `from repro.core.wfagg import wfagg` directly.
+from repro.core.wfagg import (
+    TemporalState,
+    WFAggConfig,
+    alt_wfagg_config,
+    init_temporal_state,
+    wfagg_c_agg,
+    wfagg_c_select,
+    wfagg_d_agg,
+    wfagg_d_select,
+    wfagg_e,
+    wfagg_e_agg,
+    wfagg_scores,
+    wfagg_t_select,
+)

@@ -1,0 +1,173 @@
+"""Centralized Byzantine-robust aggregation baselines (paper SsII-B).
+
+Every rule takes a candidate matrix ``updates: (K, d)`` (the K received
+models/updates, flattened) and returns ``(aggregated (d,), mask (K,) bool)``
+where ``mask`` marks the candidates that participated in the aggregate.
+All functions are jit/vmap-safe (static K) so they can run per-DFL-node
+under ``vmap`` and inside compiled multi-pod training steps.
+
+Implemented rules and their provenance:
+  mean          FedAvg simplification [McMahan et al. 2016]
+  median        coordinate-wise median [Yin et al. 2018]
+  trimmed_mean  coordinate-wise beta-trimmed mean [Yin et al. 2018]
+  krum          Krum [Blanchard et al. 2017]
+  multi_krum    Multi-Krum [Blanchard et al. 2017]
+  clustering    2-way agglomerative clustering, average linkage, cosine
+                distance; aggregate the larger cluster [Sattler et al. 2020]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def smallest_k_mask(scores: Array, k: int) -> Array:
+    """Boolean mask (K,) selecting the k smallest scores (ties broken by index)."""
+    K = scores.shape[0]
+    k = max(0, min(int(k), K))
+    if k == 0:
+        return jnp.zeros((K,), dtype=bool)
+    # top_k of negated scores; build mask by scattering.
+    _, idx = jax.lax.top_k(-scores, k)
+    return jnp.zeros((K,), dtype=bool).at[idx].set(True)
+
+
+def masked_mean(updates: Array, mask: Array) -> Array:
+    w = mask.astype(updates.dtype)
+    denom = jnp.maximum(w.sum(), 1.0)
+    return (w[:, None] * updates).sum(axis=0) / denom
+
+
+def coordinate_median(updates: Array) -> Array:
+    """Coordinate-wise median over axis 0; mean of the two middles if K even."""
+    return jnp.median(updates, axis=0)
+
+
+def pairwise_sq_dists(updates: Array) -> Array:
+    """(K, K) squared Euclidean distance matrix via the Gram expansion."""
+    sq = jnp.sum(updates * updates, axis=-1)
+    gram = updates @ updates.T
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    return jnp.maximum(d2, 0.0)
+
+
+def cosine_distance_matrix(updates: Array) -> Array:
+    norms = jnp.linalg.norm(updates, axis=-1, keepdims=True)
+    unit = updates / jnp.maximum(norms, _EPS)
+    return 1.0 - unit @ unit.T
+
+
+# ---------------------------------------------------------------------------
+# aggregation rules
+# ---------------------------------------------------------------------------
+
+def mean_agg(updates: Array) -> Tuple[Array, Array]:
+    K = updates.shape[0]
+    return jnp.mean(updates, axis=0), jnp.ones((K,), dtype=bool)
+
+
+def median_agg(updates: Array) -> Tuple[Array, Array]:
+    K = updates.shape[0]
+    return coordinate_median(updates), jnp.ones((K,), dtype=bool)
+
+
+def trimmed_mean_agg(updates: Array, beta: float = 0.1) -> Tuple[Array, Array]:
+    """Remove the smallest/largest floor(beta*K) values per coordinate."""
+    K = updates.shape[0]
+    t = int(beta * K)
+    srt = jnp.sort(updates, axis=0)
+    if t > 0:
+        srt = srt[t : K - t]
+    return jnp.mean(srt, axis=0), jnp.ones((K,), dtype=bool)
+
+
+def krum_scores(updates: Array, f: int) -> Array:
+    """Krum score per candidate: sum of sq-dists to its K-f-2 closest peers."""
+    K = updates.shape[0]
+    d2 = pairwise_sq_dists(updates)
+    d2 = d2 + jnp.diag(jnp.full((K,), jnp.inf, dtype=d2.dtype))
+    n_closest = max(1, K - int(f) - 2)
+    neg_small, _ = jax.lax.top_k(-d2, n_closest)  # per row
+    return -neg_small.sum(axis=-1)
+
+
+def krum_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
+    scores = krum_scores(updates, f)
+    best = jnp.argmin(scores)
+    mask = jnp.zeros((updates.shape[0],), dtype=bool).at[best].set(True)
+    return updates[best], mask
+
+
+def multi_krum_agg(updates: Array, f: int = 2, m: int | None = None) -> Tuple[Array, Array]:
+    K = updates.shape[0]
+    if m is None:
+        m = max(1, K // 4)  # paper: m = K/4
+    scores = krum_scores(updates, f)
+    mask = smallest_k_mask(scores, m)
+    return masked_mean(updates, mask), mask
+
+
+def clustering_select(updates: Array) -> Array:
+    """Agglomerative (average linkage, cosine distance) into 2 clusters.
+
+    Returns the boolean mask of the LARGER cluster.  Uses the
+    Lance-Williams recurrence so the merge loop is jit-compatible with
+    static candidate count K.
+    """
+    K = updates.shape[0]
+    if K <= 2:
+        return jnp.ones((K,), dtype=bool)
+    D0 = cosine_distance_matrix(updates)
+    eye = jnp.eye(K, dtype=bool)
+
+    def merge_step(carry, _):
+        D, active, sizes, assign = carry
+        pair_ok = active[:, None] & active[None, :] & ~eye
+        Dm = jnp.where(pair_ok, D, jnp.inf)
+        flat = jnp.argmin(Dm)
+        i0, j0 = flat // K, flat % K
+        i = jnp.minimum(i0, j0)
+        j = jnp.maximum(i0, j0)
+        ni, nj = sizes[i], sizes[j]
+        # average-linkage Lance-Williams: d(k, i u j) = (ni*d(k,i)+nj*d(k,j))/(ni+nj)
+        newrow = (ni * D[i] + nj * D[j]) / (ni + nj)
+        D = D.at[i, :].set(newrow).at[:, i].set(newrow)
+        active = active.at[j].set(False)
+        sizes = sizes.at[i].set(ni + nj).at[j].set(0.0)
+        assign = jnp.where(assign == j, i, assign)
+        return (D, active, sizes, assign), None
+
+    init = (D0, jnp.ones((K,), bool), jnp.ones((K,), D0.dtype), jnp.arange(K))
+    (_, _, sizes, assign), _ = jax.lax.scan(merge_step, init, None, length=K - 2)
+    big = jnp.argmax(sizes)  # slot of the larger of the two surviving clusters
+    return assign == big
+
+
+def clustering_agg(updates: Array) -> Tuple[Array, Array]:
+    mask = clustering_select(updates)
+    return masked_mean(updates, mask), mask
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+AGGREGATORS = {
+    "mean": lambda u, **kw: mean_agg(u),
+    "median": lambda u, **kw: median_agg(u),
+    "trimmed_mean": lambda u, **kw: trimmed_mean_agg(u, beta=kw.get("beta", 0.1)),
+    "krum": lambda u, **kw: krum_agg(u, f=kw.get("f", 2)),
+    "multi_krum": lambda u, **kw: multi_krum_agg(u, f=kw.get("f", 2), m=kw.get("m")),
+    "clustering": lambda u, **kw: clustering_agg(u),
+}

@@ -1,0 +1,93 @@
+"""Model-poisoning and data-poisoning attacks (paper Section V-B).
+
+Model-poisoning attacks transform the flat update vector(s) a Byzantine
+node sends.  ALIE and IPM are omniscient attacks: they are computed from
+the benign cohort's updates (standard threat model in the literature).
+Label-Flipping is a data poisoning attack and is applied to the batch
+labels inside the training step instead.
+
+All functions are jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    name: str = "none"
+    noise_mu: float = 0.1       # Noise attack mean (paper: 0.1)
+    noise_sigma: float = 0.1    # Noise attack std  (paper: 0.1)
+    alie_zmax: float = 0.5      # ALIE z_max (paper: 0.5)
+    ipm_eps: float = 0.5        # IPM epsilon (paper evaluates 0.5 and 100)
+
+
+def noise_attack(update: Array, key: Array, mu: float = 0.1, sigma: float = 0.1) -> Array:
+    """theta <- theta + N(mu, sigma^2 I)."""
+    return update + mu + sigma * jax.random.normal(key, update.shape, update.dtype)
+
+
+def sign_flip_attack(update: Array) -> Array:
+    """theta <- -theta."""
+    return -update
+
+
+def flip_labels(labels: Array, num_classes: int) -> Array:
+    """Label-Flipping data poisoning: l -> C-1-l."""
+    return (num_classes - 1) - labels
+
+
+def alie_attack(benign: Array, zmax: float = 0.5) -> Array:
+    """A-Little-Is-Enough: mu_j - z_max * sigma_j per coordinate.
+
+    ``benign``: (K_b, d) stack of benign updates the attacker can observe.
+    """
+    mu = jnp.mean(benign, axis=0)
+    sd = jnp.std(benign, axis=0)
+    return mu - zmax * sd
+
+
+def ipm_attack(benign: Array, eps: float = 0.5) -> Array:
+    """Inner-Product Manipulation: -(eps / (N-M)) * sum_benign = -eps * mean."""
+    return -eps * jnp.mean(benign, axis=0)
+
+
+def apply_model_attack(
+    name: str,
+    update: Array,
+    benign: Array,
+    key: Array,
+    cfg: Optional[AttackConfig] = None,
+) -> Array:
+    """Dispatch a model-poisoning attack on a single flat update.
+
+    ``benign`` is the (K_b, d) stack of benign updates (for omniscient
+    attacks).  ``name`` in {none, noise, sign_flip, label_flip, alie,
+    ipm_0.5, ipm_100}.  label_flip is a no-op here (handled in the data
+    pipeline) so that the engine can treat all attacks uniformly.
+    """
+    cfg = cfg or AttackConfig(name=name)
+    if name in ("none", "label_flip"):
+        return update
+    if name == "noise":
+        return noise_attack(update, key, cfg.noise_mu, cfg.noise_sigma)
+    if name == "sign_flip":
+        return sign_flip_attack(update)
+    if name == "alie":
+        return alie_attack(benign, cfg.alie_zmax)
+    if name == "ipm_0.5":
+        return ipm_attack(benign, 0.5)
+    if name == "ipm_100":
+        return ipm_attack(benign, 100.0)
+    if name == "ipm":
+        return ipm_attack(benign, cfg.ipm_eps)
+    raise ValueError(f"unknown attack {name!r}")
+
+
+ATTACK_NAMES = ("none", "noise", "sign_flip", "label_flip", "ipm_0.5", "ipm_100", "alie")

@@ -1,0 +1,46 @@
+"""Pytree <-> flat-vector utilities.
+
+All aggregation rules in this library operate on flat parameter/update
+vectors (the paper's theta_j in R^d).  Models are pytrees; these helpers
+bridge the two representations without copying more than once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def tree_ravel(tree):
+    """Flatten a pytree to (vec, unravel_fn)."""
+    return ravel_pytree(tree)
+
+
+def tree_stack_ravel(trees):
+    """Stack a list of pytrees into a (K, d) matrix + shared unravel fn."""
+    vecs = []
+    unravel = None
+    for t in trees:
+        v, unravel = ravel_pytree(t)
+        vecs.append(v)
+    return jnp.stack(vecs), unravel
+
+
+def vmap_ravel(batched_tree):
+    """Ravel a pytree whose leaves carry a leading axis K -> (K, d).
+
+    Returns (mat, unravel_one) where unravel_one maps a single (d,) vector
+    back to an unbatched pytree.
+    """
+    one = jax.tree.map(lambda x: x[0], batched_tree)
+    _, unravel_one = ravel_pytree(one)
+    mat = jax.vmap(lambda t: ravel_pytree(t)[0])(batched_tree)
+    return mat, unravel_one
+
+
+def tree_size(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))

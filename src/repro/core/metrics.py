@@ -1,0 +1,42 @@
+"""Evaluation metrics (paper Section V-C)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def micro_accuracy(logits: Array, labels: Array) -> Array:
+    """Micro-averaged multi-class accuracy = total TP / |D_test| (Eq. 6)."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean((pred == labels).astype(jnp.float32))
+
+
+def r_squared(vectors: Array) -> Array:
+    """Multivariate R^2 consistency metric (Eq. 7).
+
+    R^2 = 1 - SSR/SST with
+      SSR = sum_i ||v_i - mean||^2   (dispersion around the mean vector)
+      SST = sum_i ||v_i||^2          (normalizer)
+
+    Applied to the flat local models of the *benign* nodes: ~1 means the
+    decentralized models have converged to a consensus.
+    """
+    vbar = jnp.mean(vectors, axis=0)
+    ssr = jnp.sum((vectors - vbar[None, :]) ** 2)
+    sst = jnp.sum(vectors**2)
+    return 1.0 - ssr / jnp.maximum(sst, 1e-12)
+
+
+def consensus_distance(vectors: Array) -> Array:
+    """Mean squared distance to the cohort mean (complementary to R^2)."""
+    vbar = jnp.mean(vectors, axis=0)
+    return jnp.mean(jnp.sum((vectors - vbar[None, :]) ** 2, axis=-1))
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean softmax cross-entropy with integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

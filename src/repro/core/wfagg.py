@@ -1,0 +1,270 @@
+"""WFAgg: the paper's Byzantine-robust aggregation algorithm (Section IV).
+
+Components (each maps to a paper algorithm):
+  wfagg_d_select   Alg. 2 - distance filter around the coordinate-wise median
+  wfagg_c_select   Alg. 3 - cosine-similarity filter with norm clipping
+  wfagg_t_select   Alg. 4 - temporal EWMA filter over round-to-round metrics
+  wfagg_e          Eq. 3  - exponential-smoothing weighted aggregation
+  wfagg            Alg. 1 - full pipeline: 3 filters -> tau-weighted scoring
+                   (accept needs >= 2 filters) -> WFAgg-E aggregation
+  alt_wfagg        paper SsVI-B2 - same scoring, with Multi-Krum as the
+                   distance filter and Clustering as the similarity filter
+
+All selectors take ``updates: (K, d)`` and return boolean masks ``(K,)``;
+everything is jit/vmap-safe with static K, so the same code runs per-node
+in the mode-A DFL engine and (chunked) inside the mode-B multi-pod
+training step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg
+
+Array = jax.Array
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class WFAggConfig:
+    """Hyper-parameters (defaults = paper Section V-A)."""
+
+    f: int = 2                  # estimated number of malicious candidates
+    tau1: float = 0.4           # weight of the distance filter (WFAgg-D)
+    tau2: float = 0.4           # weight of the similarity filter (WFAgg-C)
+    tau3: float = 0.2           # weight of the temporal filter (WFAgg-T)
+    alpha: float = 0.8          # WFAgg-E smoothing factor
+    window: int = 3             # W - temporal window length
+    transient: int = 3          # T_th - rounds before WFAgg-T activates
+    ewma_decay: float = 0.5     # lambda of the exponentially weighted window
+    use_temporal: bool = True   # disable to drop the (K, d) prev-update state
+    # Alt-WFAgg: swap in SOTA filters of the same family.
+    distance_filter: str = "wfagg_d"     # or "multi_krum"
+    similarity_filter: str = "wfagg_c"   # or "clustering"
+    multi_krum_m: Optional[int] = None   # Multi-Krum m (default K//4)
+
+    @property
+    def accept_threshold(self) -> float:
+        """A model must be accepted by >= 2 filters (Alg. 1 line 19)."""
+        pairs = (self.tau1 + self.tau2, self.tau1 + self.tau3, self.tau2 + self.tau3)
+        return min(pairs)
+
+
+class TemporalState(NamedTuple):
+    """Per-receiving-node WFAgg-T state (Alg. 4).
+
+    Each node stores only the last model per neighbor plus a ring buffer of
+    the last W distance/cosine metrics (paper: 'Each node only needs to
+    store the history of the distance metrics and only the last model sent
+    by each neighboring node').
+    """
+
+    prev: Array      # (K, d)  last update from each neighbor
+    hist_s: Array    # (W, K)  ring buffer of squared-distance metrics
+    hist_b: Array    # (W, K)  ring buffer of cosine-distance metrics
+    count: Array     # ()      number of metric rounds recorded so far
+    t: Array         # ()      current round index
+
+
+def init_temporal_state(K: int, d: int, window: int, dtype=jnp.float32) -> TemporalState:
+    return TemporalState(
+        prev=jnp.zeros((K, d), dtype=dtype),
+        hist_s=jnp.zeros((window, K), dtype=jnp.float32),
+        hist_b=jnp.zeros((window, K), dtype=jnp.float32),
+        count=jnp.zeros((), dtype=jnp.int32),
+        t=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Filters
+# ---------------------------------------------------------------------------
+
+def wfagg_d_select(updates: Array, f: int) -> Array:
+    """Alg. 2: keep the K-f-1 candidates closest (L2) to the median model."""
+    K = updates.shape[0]
+    med = agg.coordinate_median(updates)
+    d2 = jnp.sum((updates - med[None, :]) ** 2, axis=-1)
+    return agg.smallest_k_mask(d2, K - int(f) - 1)
+
+
+def wfagg_c_stats(updates: Array) -> Tuple[Array, Array]:
+    """Cosine distances of norm-clipped candidates to the median model.
+
+    Returns (alpha_j (K,), clipped updates (K, d)).  Note that positive
+    rescaling cannot change a cosine, so clipping affects downstream
+    magnitude only — selection matches the paper's Alg. 3 either way.
+    """
+    med = agg.coordinate_median(updates)
+    norms = jnp.linalg.norm(updates, axis=-1)
+    tau_med = jnp.median(norms)
+    scale = jnp.minimum(1.0, tau_med / jnp.maximum(norms, _EPS))
+    clipped = updates * scale[:, None]
+    med_n = jnp.linalg.norm(med)
+    cnorms = jnp.linalg.norm(clipped, axis=-1)
+    cos = (clipped @ med) / jnp.maximum(cnorms * med_n, _EPS)
+    return 1.0 - cos, clipped
+
+
+def wfagg_c_select(updates: Array, f: int) -> Array:
+    """Alg. 3: keep the K-f-1 candidates with smallest cosine distance."""
+    K = updates.shape[0]
+    alpha_j, _ = wfagg_c_stats(updates)
+    return agg.smallest_k_mask(alpha_j, K - int(f) - 1)
+
+
+def _ewma_mean_std(hist: Array, count: Array, decay: float) -> Tuple[Array, Array]:
+    """Exponentially weighted mean/std over a ring buffer hist (W, K).
+
+    hist[0] is the most recent entry.  Entries beyond ``count`` are masked.
+    """
+    W = hist.shape[0]
+    ages = jnp.arange(W, dtype=jnp.float32)
+    valid = ages < count.astype(jnp.float32)
+    w = jnp.where(valid, decay ** ages, 0.0)
+    w = w / jnp.maximum(w.sum(), _EPS)
+    mu = jnp.einsum("w,wk->k", w, hist)
+    var = jnp.einsum("w,wk->k", w, (hist - mu[None, :]) ** 2)
+    return mu, jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def wfagg_t_decide(hist_s: Array, hist_b: Array, count: Array, t: Array,
+                   s_t: Array, b_t: Array, cfg: WFAggConfig):
+    """Alg. 4 decision core on precomputed round-over-round metrics.
+
+    Factored out so callers that compute s_t/b_t elsewhere (the sharded
+    per-leaf aggregation path computes them exactly from each worker's own
+    previous gradient) share the EWMA thresholds and ring-buffer update.
+    Returns (mask, hist_s', hist_b', count', t')."""
+    mu_d, sd_d = _ewma_mean_std(hist_s, count, cfg.ewma_decay)
+    mu_c, sd_c = _ewma_mean_std(hist_b, count, cfg.ewma_decay)
+
+    in_d = (s_t >= mu_d - sd_d) & (s_t <= mu_d + sd_d)
+    in_c = (b_t >= mu_c - sd_c) & (b_t <= mu_c + sd_c)
+    active = (t > cfg.transient) & (count > 0)
+    mask = jnp.where(active, in_d & in_c, jnp.zeros_like(in_d))
+
+    # Ring-buffer push (most recent at index 0).
+    hist_s = jnp.roll(hist_s, 1, axis=0).at[0].set(s_t)
+    hist_b = jnp.roll(hist_b, 1, axis=0).at[0].set(b_t)
+    return mask, hist_s, hist_b, jnp.minimum(count + 1, hist_s.shape[0]), t + 1
+
+
+def wfagg_t_select(state: TemporalState, updates: Array, cfg: WFAggConfig) -> Tuple[Array, TemporalState]:
+    """Alg. 4: flag updates whose round-over-round change is abrupt.
+
+    Returns (mask, new_state).  During the transient (t <= T_th) no model is
+    classified benign by this filter (T3 = empty set), but metric history is
+    still accumulated so the window is warm when the filter activates.
+    """
+    prev = state.prev
+    s_t = jnp.sum((updates - prev) ** 2, axis=-1)
+    num = jnp.sum(updates * prev, axis=-1)
+    den = jnp.maximum(
+        jnp.linalg.norm(updates, axis=-1) * jnp.linalg.norm(prev, axis=-1), _EPS
+    )
+    b_t = 1.0 - num / den
+
+    mask, hist_s, hist_b, count, t = wfagg_t_decide(
+        state.hist_s, state.hist_b, state.count, state.t, s_t, b_t, cfg)
+    new_state = TemporalState(prev=updates, hist_s=hist_s, hist_b=hist_b,
+                              count=count, t=t)
+    return mask, new_state
+
+
+# ---------------------------------------------------------------------------
+# Scoring + aggregation
+# ---------------------------------------------------------------------------
+
+def wfagg_scores(mask_d: Array, mask_c: Array, mask_t: Array, cfg: WFAggConfig) -> Array:
+    """Alg. 1 lines 9-22: tau-weighted filter votes with a 2-filter floor."""
+    w = (
+        cfg.tau1 * mask_d.astype(jnp.float32)
+        + cfg.tau2 * mask_c.astype(jnp.float32)
+        + cfg.tau3 * mask_t.astype(jnp.float32)
+    )
+    return jnp.where(w < cfg.accept_threshold - 1e-9, 0.0, w)
+
+
+def wfagg_e(local: Array, updates: Array, weights: Array, alpha: float) -> Array:
+    """Eq. 3: theta_i <- (1-a)*theta_i + a * sum_j w'_ij theta_j.
+
+    If every neighbor was rejected (sum w = 0) the node keeps its local
+    model (the neighbor term vanishes rather than dividing by zero).
+    """
+    wsum = weights.sum()
+    w_norm = weights / jnp.maximum(wsum, _EPS)
+    neighbor = jnp.einsum("k,kd->d", w_norm, updates)
+    eff_alpha = jnp.where(wsum > 0, alpha, 0.0)
+    return (1.0 - eff_alpha) * local + eff_alpha * neighbor
+
+
+def _distance_mask(updates: Array, cfg: WFAggConfig) -> Array:
+    if cfg.distance_filter == "wfagg_d":
+        return wfagg_d_select(updates, cfg.f)
+    if cfg.distance_filter == "multi_krum":
+        K = updates.shape[0]
+        m = cfg.multi_krum_m or max(1, K // 4)
+        scores = agg.krum_scores(updates, cfg.f)
+        return agg.smallest_k_mask(scores, m)
+    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
+
+
+def _similarity_mask(updates: Array, cfg: WFAggConfig) -> Array:
+    if cfg.similarity_filter == "wfagg_c":
+        return wfagg_c_select(updates, cfg.f)
+    if cfg.similarity_filter == "clustering":
+        return agg.clustering_select(updates)
+    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+
+
+def wfagg(
+    local: Array,
+    updates: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Full WFAgg (Alg. 1).  Returns (aggregated, new_state, info)."""
+    mask_d = _distance_mask(updates, cfg)
+    mask_c = _similarity_mask(updates, cfg)
+    if cfg.use_temporal and state is not None:
+        mask_t, new_state = wfagg_t_select(state, updates, cfg)
+    else:
+        mask_t = jnp.zeros((updates.shape[0],), dtype=bool)
+        new_state = state
+    weights = wfagg_scores(mask_d, mask_c, mask_t, cfg)
+    out = wfagg_e(local, updates, weights, cfg.alpha)
+    info = {
+        "mask_d": mask_d,
+        "mask_c": mask_c,
+        "mask_t": mask_t,
+        "weights": weights,
+        "n_accepted": (weights > 0).sum(),
+    }
+    return out, new_state, info
+
+
+def alt_wfagg_config(**kw) -> WFAggConfig:
+    """Alt-WFAgg (paper SsVI-B2): Multi-Krum + Clustering as the filters."""
+    return WFAggConfig(distance_filter="multi_krum", similarity_filter="clustering", **kw)
+
+
+# Standalone aggregators (Table I columns WFAgg-D / WFAgg-C / WFAgg-E / WFAgg-T)
+def wfagg_d_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
+    mask = wfagg_d_select(updates, f)
+    return agg.masked_mean(updates, mask), mask
+
+
+def wfagg_c_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
+    mask = wfagg_c_select(updates, f)
+    return agg.masked_mean(updates, mask), mask
+
+
+def wfagg_e_agg(local: Array, updates: Array, alpha: float = 0.8) -> Array:
+    """WFAgg-E alone: uniform weights over all neighbors (no filtering)."""
+    K = updates.shape[0]
+    return wfagg_e(local, updates, jnp.ones((K,), jnp.float32), alpha)

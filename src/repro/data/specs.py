@@ -1,0 +1,60 @@
+"""Input specs per (architecture x input shape).
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model
+input (the dry-run path: weak-type-correct, shardable, zero allocation).
+``dummy_batch`` materializes small real arrays for smoke tests.
+
+Modality carve-out (per task rules): audio/vision frontends are stubs —
+the specs provide precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.model import MODAL_EMBED_DIM
+
+SDS = jax.ShapeDtypeStruct
+
+ENC_LEN_DECODE = 4096  # audio encoder output length assumed during decode
+
+
+def train_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Specs for train_step / prefill batches."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    if cfg.modality == "vision":
+        n_img = cfg.n_modal_tokens
+        return {
+            "patch_embeds": SDS((B, n_img, MODAL_EMBED_DIM), jnp.dtype(cfg.dtype)),
+            "tokens": SDS((B, S - n_img), jnp.int32),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    return {"tokens": SDS((shape.global_batch, 1), jnp.int32)}
+
+
+def dummy_batch(cfg: ArchConfig, batch: int, seq: int, key=None) -> Dict[str, Any]:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+        }
+    if cfg.modality == "vision":
+        n_img = cfg.n_modal_tokens
+        return {
+            "patch_embeds": jax.random.normal(k1, (batch, n_img, MODAL_EMBED_DIM), jnp.dtype(cfg.dtype)),
+            "tokens": jax.random.randint(k2, (batch, max(seq - n_img, 8)), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)}

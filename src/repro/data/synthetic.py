@@ -1,0 +1,97 @@
+"""Deterministic synthetic datasets (the container has no dataset access).
+
+Two generators:
+
+* ``TokenStream`` — language-model token batches with learnable structure:
+  a seeded order-1 Markov chain over an effective vocabulary embedded into
+  the model's vocab.  Loss decreases quickly on it, which the end-to-end
+  training examples assert.
+
+* ``SyntheticImages`` — the MNIST stand-in for the paper reproduction:
+  10 fixed class templates (seeded, 28x28) + Gaussian pixel noise, IID
+  sharded across DFL nodes.  Linearly separable enough that LeNet/MLP
+  reach high accuracy within a round or two, reproducing the paper's
+  accuracy-convergence structure without the MNIST download.
+
+Both are stateless: ``batch(step)`` is a pure function of (seed, step), so
+data is reproducible, checkpoint-restart-safe, and needs no host state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    effective_vocab: int = 64   # Markov chain order
+
+    def _chain(self) -> Array:
+        """Transition table (effective_vocab,) -> deterministic successor
+        distribution expressed as 8 plausible successors per token."""
+        key = jax.random.PRNGKey(self.seed)
+        return jax.random.randint(key, (self.effective_vocab, 8), 0, self.effective_vocab)
+
+    def batch(self, step: int | Array) -> Dict[str, Array]:
+        succ = self._chain()
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        k0, k1 = jax.random.split(key)
+        x0 = jax.random.randint(k0, (self.batch_size,), 0, self.effective_vocab)
+        picks = jax.random.randint(k1, (self.batch_size, self.seq_len), 0, 8)
+
+        def gen(tok, pick):
+            nxt = succ[tok, pick]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            lambda c, p: gen(c, p), x0, picks.T
+        )
+        tokens = toks.T % self.vocab_size
+        return {"tokens": tokens.astype(jnp.int32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticImages:
+    """MNIST-shaped 10-class task: template + noise."""
+
+    n_classes: int = 10
+    noise: float = 0.35
+    seed: int = 0
+
+    def templates(self) -> Array:
+        key = jax.random.PRNGKey(self.seed + 17)
+        t = jax.random.normal(key, (self.n_classes, 28, 28, 1))
+        # smooth the templates a little so they resemble strokes, not static
+        k = jnp.ones((3, 3)) / 9.0
+        t = jax.vmap(
+            lambda img: jax.scipy.signal.convolve2d(img[..., 0], k, mode="same")
+        )(t)[..., None]
+        return t
+
+    def batch(self, key: Array, batch_size: int) -> Tuple[Array, Array]:
+        """Returns (images (B,28,28,1), labels (B,))."""
+        k1, k2 = jax.random.split(key)
+        labels = jax.random.randint(k1, (batch_size,), 0, self.n_classes)
+        tpl = self.templates()
+        imgs = tpl[labels] + self.noise * jax.random.normal(k2, (batch_size, 28, 28, 1))
+        return imgs, labels
+
+    def node_batch(self, node: int, rnd: int, batch_size: int) -> Tuple[Array, Array]:
+        """IID per-node batch, deterministic in (seed, node, round)."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), node), rnd
+        )
+        return self.batch(key, batch_size)
+
+    def test_set(self, n: int = 1000) -> Tuple[Array, Array]:
+        return self.batch(jax.random.PRNGKey(self.seed + 999), n)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the WFAgg aggregation hot-spots.
+
+The paper's complexity analysis (Sections IV-C/D) identifies the
+coordinate-wise median over K candidates as the dominant O(dK log K)
+cost of every filter.  At production scale (d = 1e9..1e11) the candidate
+tensor must stream HBM->VMEM exactly once, so we fuse the order
+statistics with every other per-candidate statistic the filters need:
+
+  robust_stats   fused median + trimmed-mean + WFAgg-D/C statistics
+  pairwise_dist  blocked K x K sq-distance Gram (Krum / Multi-Krum)
+  weighted_agg   fused WFAgg-E trust-weighted combine (Eq. 3)
+
+Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper) and ref.py (pure-jnp oracle); validated with interpret=True.
+"""
+from repro.kernels.robust_stats.ops import robust_stats
+from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref
+from repro.kernels.pairwise_dist.ops import pairwise_sq_dists as pairwise_sq_dists_kernel
+from repro.kernels.pairwise_dist.ref import pairwise_dist_ref
+from repro.kernels.weighted_agg.ops import weighted_agg
+from repro.kernels.weighted_agg.ref import weighted_agg_ref

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: flash attention (online softmax over KV blocks).
+
+Tiling: grid (BH, Sq/bq, Sk/bk) with the KV-block axis INNERMOST — on TPU
+the last grid dimension executes sequentially per core, so the (bq, hd)
+output block plus the (1, bq) running max / denominator are *revisited*
+accumulators in VMEM: initialized at ik == 0, rescaled by the online-
+softmax correction every step, and divided by the denominator at
+ik == nk-1.  The (Sq, Sk) score matrix exists only as one (bq, bk) VMEM
+tile at a time; HBM traffic is one read of Q/K/V plus one write of O —
+the whole point versus the XLA path, whose fusion boundary materializes
+every score chunk (EXPERIMENTS.md §Perf, chunked-attention entry).
+
+bq/bk default to 128/128 (MXU-aligned); hd rides along unblocked.
+Causal masking is computed from program ids (no mask tensor exists).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref,       # (1,bq,hd), (1,bk,hd), (1,bk,hd)
+                  o_ref, m_ref, l_ref,       # (1,bq,hd), (1,bq), (1,bq)
+                  *, scale: float, causal: bool, sk_valid: int, off: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)           # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < sk_valid                    # strip Sk padding
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + off
+        valid = valid & (kpos <= qpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]                          # (bq,)
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+
+    acc = o_ref[0].astype(jnp.float32) * corr[:, None]
+    acc = acc + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new[None]
+    l_ref[...] = l_new[None]
+
+    nk = pl.num_programs(2)
+
+    @pl.when(ik < nk - 1)
+    def _store():
+        o_ref[...] = acc[None].astype(o_ref.dtype)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc / jnp.maximum(l_new, 1e-30)[:, None])[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: Array, k: Array, v: Array,
+    *, scale: float, causal: bool = True, sk_valid: int | None = None,
+    q_offset: int = 0, block_q: int = 128, block_k: int = 128,
+    interpret: bool = True,
+):
+    """q (BH, Sq, hd), k/v (BH, Sk, hd); Sq % block_q == Sk % block_k == 0.
+
+    ``sk_valid`` masks KV padding; ``q_offset`` shifts query positions for
+    decode-style alignment (qpos = q_offset + row).
+    """
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    grid = (BH, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        sk_valid=Sk if sk_valid is None else sk_valid, off=q_offset)
+    out_shapes = (
+        jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+    )
+    in_specs = [
+        pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+    ]
+    out_specs = (
+        pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, k, v)

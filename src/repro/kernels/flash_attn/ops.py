@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Pads Sq/Sk to block multiples (padding is masked inside the kernel via
+``sk_valid`` / the causal test) and reshapes (B,H,S,hd) <-> (BH,S,hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "block_q", "block_k", "interpret", "use_kernel"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    scale: float, causal: bool = True,
+    block_q: int = 128, block_k: int = 128,
+    interpret: bool = True, use_kernel: bool = True,
+) -> jax.Array:
+    """q (B,H,Sq,hd), k/v (B,H,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Sk, hd)
+    vf = v.reshape(B * H, Sk, hd)
+    if not use_kernel:
+        return flash_attention_ref(qf, kf, vf, scale, causal).reshape(B, H, Sq, hd)
+
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    out, _, _ = flash_attention_pallas(
+        qf, kf, vf, scale=scale, causal=causal, sk_valid=Sk,
+        q_offset=Sk - Sq,  # align ends: standard self/decode convention
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :Sq].reshape(B, H, Sq, hd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, scale: float,
+                        causal: bool = True) -> Array:
+    """q (BH, Sq, hd), k/v (BH, Sk, hd) -> (BH, Sq, hd); dense softmax."""
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(Sq) + (Sk - Sq)   # align ends (decode-style)
+        mask = jnp.arange(Sk)[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: blocked pairwise squared distances (Krum/Multi-Krum).
+
+Uses the Gram expansion ||a-b||^2 = ||a||^2 + ||b||^2 - 2<a,b> so the inner
+loop is a (K, T) x (T, K) matmul per block — MXU work rather than VPU work.
+The (K, K) Gram and the (1, K) squared norms accumulate in revisited VMEM
+blocks across the 1-D grid over D; the final combine happens in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(u_ref, gram_ref, norm2_ref):
+    u = u_ref[...].astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        norm2_ref[...] = jnp.zeros_like(norm2_ref)
+
+    gram_ref[...] += jnp.dot(u, u.T, preferred_element_type=jnp.float32)
+    norm2_ref[...] += jnp.sum(u * u, axis=1)[None, :]
+
+
+def pairwise_pallas(updates: jax.Array, *, block_d: int = 1024, interpret: bool = True):
+    K, D = updates.shape
+    assert D % block_d == 0
+    grid = (D // block_d,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((K, K), jnp.float32),
+        jax.ShapeDtypeStruct((1, K), jnp.float32),
+    )
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, block_d), lambda i: (0, i))],
+        out_specs=(
+            pl.BlockSpec((K, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(updates)

@@ -1,0 +1,31 @@
+"""Jitted wrapper: pairwise squared-distance matrix via the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_dist.kernel import pairwise_pallas
+from repro.kernels.pairwise_dist.ref import pairwise_dist_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret", "use_kernel"))
+def pairwise_sq_dists(
+    updates: jax.Array,
+    block_d: int = 1024,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return pairwise_dist_ref(updates)
+    K, D = updates.shape
+    pad = (-D) % block_d
+    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    gram, norm2 = pairwise_pallas(u, block_d=block_d, interpret=interpret)
+    n = norm2[0]
+    d2 = n[:, None] + n[None, :] - 2.0 * gram
+    # The Gram expansion cancels catastrophically on the diagonal; the
+    # self-distance is exactly zero, so pin it.
+    d2 = d2 * (1.0 - jnp.eye(K, dtype=d2.dtype))
+    return jnp.maximum(d2, 0.0)

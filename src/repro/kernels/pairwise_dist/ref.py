@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: pairwise squared-distance Gram matrix for Krum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(updates: jax.Array) -> jax.Array:
+    """(K, D) -> (K, K) squared Euclidean distances."""
+    diff = updates[:, None, :] - updates[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the fused robust-stats kernel.
+
+Handles D padding to the block size (zero padding is exact: a zero column
+has median 0, contributing nothing to any accumulated statistic) and
+returns the same ``RobustStats`` namedtuple as the oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.robust_stats.kernel import robust_stats_pallas
+from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref, trim_count
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block_d", "interpret", "use_kernel"))
+def robust_stats(
+    updates: jax.Array,
+    beta: float = 0.1,
+    block_d: int = 1024,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> RobustStats:
+    """Fused median / trimmed-mean / WFAgg filter statistics over (K, D)."""
+    if not use_kernel:
+        return robust_stats_ref(updates, beta)
+    K, D = updates.shape
+    n_trim = trim_count(K, beta)
+    pad = (-D) % block_d
+    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    med, trim, dist2, dotmed, norm2, mednorm2 = robust_stats_pallas(
+        u, n_trim=n_trim, block_d=block_d, interpret=interpret
+    )
+    return RobustStats(
+        med=med[0, :D],
+        trim=trim[0, :D],
+        dist2=dist2[0],
+        dotmed=dotmed[0],
+        norm2=norm2[0],
+        mednorm2=mednorm2[0, 0],
+    )

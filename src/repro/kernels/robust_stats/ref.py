@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused robust-statistics kernel.
+
+Given a candidate matrix ``updates (K, D)`` computes, in one logical pass:
+  med       (D,)  coordinate-wise median (mean of the two middles, K even)
+  trim      (D,)  beta-trimmed coordinate-wise mean
+  dist2     (K,)  squared L2 distance of each candidate to the median model
+  dotmed    (K,)  inner product of each candidate with the median model
+  norm2     (K,)  squared L2 norm of each candidate
+  mednorm2  ()    squared L2 norm of the median model
+
+These are exactly the sufficient statistics of WFAgg-D (Alg. 2) and
+WFAgg-C (Alg. 3) plus the Median / Trimmed-Mean baselines — one HBM read
+of the candidate block serves all of them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class RobustStats(NamedTuple):
+    med: Array
+    trim: Array
+    dist2: Array
+    dotmed: Array
+    norm2: Array
+    mednorm2: Array
+
+    def cosine_to_median(self) -> Array:
+        """1 - cos(theta_j, theta_med): the WFAgg-C metric (clip-invariant)."""
+        denom = jnp.sqrt(jnp.maximum(self.norm2 * self.mednorm2, 1e-24))
+        return 1.0 - self.dotmed / denom
+
+
+def trim_count(K: int, beta: float) -> int:
+    return int(beta * K)
+
+
+def robust_stats_ref(updates: Array, beta: float = 0.1) -> RobustStats:
+    K = updates.shape[0]
+    srt = jnp.sort(updates, axis=0)
+    if K % 2 == 1:
+        med = srt[K // 2]
+    else:
+        med = 0.5 * (srt[K // 2 - 1] + srt[K // 2])
+    t = trim_count(K, beta)
+    trim = jnp.mean(srt[t : K - t] if t > 0 else srt, axis=0)
+    diff = updates - med[None, :]
+    dist2 = jnp.sum(diff * diff, axis=-1)
+    dotmed = updates @ med
+    norm2 = jnp.sum(updates * updates, axis=-1)
+    mednorm2 = jnp.sum(med * med)
+    return RobustStats(med, trim, dist2, dotmed, norm2, mednorm2)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused WFAgg-E consensus combine.
+
+out = lcoef * local + wvec @ updates, blocked over D.  ``wvec`` carries the
+already-normalized trust weights scaled by the smoothing factor alpha, and
+``lcoef`` = 1 - alpha_eff; both are computed once in ops.py (they are (K,)
+and scalar — negligible), so the kernel makes exactly one HBM pass over
+the (K, D) candidates fused with the (D,) local model read and (D,) write.
+The K-way reduce is a (1, K) x (K, T) matmul -> MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _weighted_agg_kernel(w_ref, lcoef_ref, local_ref, u_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)            # (K, T)
+    w = w_ref[...].astype(jnp.float32)            # (1, K)
+    lc = lcoef_ref[0, 0]
+    acc = jnp.dot(w, u, preferred_element_type=jnp.float32)  # (1, T)
+    out_ref[...] = lc * local_ref[...].astype(jnp.float32) + acc
+
+
+def weighted_agg_pallas(
+    wvec: jax.Array,      # (1, K) normalized weights * alpha_eff
+    lcoef: jax.Array,     # (1, 1) local coefficient 1 - alpha_eff
+    local: jax.Array,     # (1, D)
+    updates: jax.Array,   # (K, D)
+    *,
+    block_d: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    K, D = updates.shape
+    assert D % block_d == 0
+    grid = (D // block_d,)
+    return pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        interpret=interpret,
+    )(wvec, lcoef, local, updates)

@@ -1,0 +1,40 @@
+"""Jitted wrapper for the fused WFAgg-E combine kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_agg.kernel import weighted_agg_pallas
+from repro.kernels.weighted_agg.ref import weighted_agg_ref
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_d", "interpret", "use_kernel"))
+def weighted_agg(
+    local: jax.Array,
+    updates: jax.Array,
+    weights: jax.Array,
+    alpha: float = 0.8,
+    block_d: int = 1024,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return weighted_agg_ref(local, updates, weights, alpha)
+    K, D = updates.shape
+    wsum = weights.sum()
+    w_norm = weights / jnp.maximum(wsum, 1e-12)
+    eff_alpha = jnp.where(wsum > 0, alpha, 0.0)
+    pad = (-D) % block_d
+    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    loc = jnp.pad(local.astype(jnp.float32), (0, pad))[None, :]
+    out = weighted_agg_pallas(
+        (eff_alpha * w_norm)[None, :].astype(jnp.float32),
+        jnp.reshape(1.0 - eff_alpha, (1, 1)).astype(jnp.float32),
+        loc,
+        u,
+        block_d=block_d,
+        interpret=interpret,
+    )
+    return out[0, :D]

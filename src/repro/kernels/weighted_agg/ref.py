@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the WFAgg-E weighted-aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(
+    local: jax.Array, updates: jax.Array, weights: jax.Array, alpha: float
+) -> jax.Array:
+    """Eq. 3: (1-a)*local + a * sum_j w'_j theta_j with w' normalized.
+
+    If all weights are zero the neighbor term vanishes and the local model
+    is returned unchanged.
+    """
+    wsum = weights.sum()
+    w_norm = weights / jnp.maximum(wsum, 1e-12)
+    eff_alpha = jnp.where(wsum > 0, alpha, 0.0)
+    return (1.0 - eff_alpha) * local + eff_alpha * (w_norm @ updates)

@@ -1,0 +1,416 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE — but every
+layer stack in this codebase is a ``lax.scan`` (L iterations) and the
+robust all-reduce streams gradient chunks through a scan (n_chunks
+iterations).  Raw cost_analysis therefore under-reports FLOPs, HBM bytes
+and collective traffic by 1-3 orders of magnitude on exactly the programs
+we care about.
+
+This module re-derives the three roofline terms from the optimized HLO
+text itself:
+
+  1. split the module into computations;
+  2. build a global  %name -> (dtype, shape)  table from instruction defs
+     (operands are printed without types on the CPU backend);
+  3. per computation, accumulate
+       - dot/convolution FLOPs (from output shape x contracting dims),
+       - fusion-granularity HBM bytes (each top-level op materializes its
+         output once and reads its operands once),
+       - collective wire bytes (ring-schedule factors per kind);
+  4. walk the call graph (body=/condition=/calls=) multiplying every
+     computation's cost by the product of enclosing while-loop
+     ``known_trip_count``s;
+  5. totals = sum over computations of multiplier x local cost.
+
+Validated against unrolled references in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.+?\)?)\s+([\w\-]+)\(")
+_SHAPE_TOK_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"?n"?[":\\]+(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_KERNEL_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+# opcodes that move no HBM bytes at fusion granularity
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "iota", "after-all", "partition-id", "replica-id", "custom-call",
+    "opt-barrier", "domain", "add-dependency",
+}
+
+
+def _parse_shape(text: str) -> Tuple[int, int]:
+    """(total elements across shape tokens, total bytes)."""
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_TOK_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_text: str
+    opcode: str
+    line: str
+
+    @property
+    def out_elems(self) -> int:
+        return _parse_shape(self.out_text)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _parse_shape(self.out_text)[1]
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_by_kind: Optional[Dict[str, float]] = None
+    unknown_trip: int = 0
+
+    def __post_init__(self):
+        if self.coll_by_kind is None:
+            self.coll_by_kind = {k: 0.0 for k in _COLL_KINDS}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    wire_bytes: float
+    coll_by_kind: Dict[str, float]
+    n_while: int
+    unknown_trip_whiles: int
+    trip_counts: List[int]
+    top_bytes: Optional[List[Tuple[float, str]]] = None  # (bytes x mult, instr)
+    top_wire: Optional[List[Tuple[float, str]]] = None
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HEADER_RE.match(line)
+        if m and not line.lstrip().startswith("%param"):
+            current = m.group(1)
+            comps[current] = []
+            if raw.startswith("ENTRY"):
+                entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None and "=" in line:
+            comps[current].append(line)
+    return comps, entry
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len([s for s in m.group(1).split(",") if s.strip()]))
+    if "source_target_pairs=" in line:
+        return 2
+    return n_devices
+
+
+def _wire_bytes(kind: str, out_b: float, S: int) -> float:
+    if kind == "all-gather":
+        return out_b * (S - 1) / max(S, 1)
+    if kind == "all-reduce":
+        return 2 * out_b * (S - 1) / max(S, 1)
+    if kind == "reduce-scatter":
+        return out_b * (S - 1)
+    if kind == "all-to-all":
+        return out_b * (S - 1) / max(S, 1)
+    return float(out_b)  # collective-permute
+
+
+def analyze(hlo: str, n_devices: int) -> HloCost:
+    comps, entry = _split_computations(hlo)
+
+    # global name -> output type text (names are module-unique in printed HLO)
+    shapes: Dict[str, str] = {}
+    parsed: Dict[str, List[Instr]] = {}
+    for cname, lines in comps.items():
+        instrs = []
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, out_text, opcode = m.groups()
+            shapes[name] = out_text
+            instrs.append(Instr(name, out_text, opcode, line))
+        parsed[cname] = instrs
+
+    def operand_names(line: str) -> List[str]:
+        # operands live between the opcode '(' and its matching ')'
+        start = line.find("(", line.find("=") + 1)
+        depth, end = 0, len(line)
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND_RE.findall(line[start:end])
+
+    def operand_bytes(line: str) -> int:
+        total = 0
+        for name in operand_names(line):
+            if name in shapes:
+                total += _parse_shape(shapes[name])[1]
+        return total
+
+    # computation roots (last instruction with ROOT marker) + fused set
+    roots: Dict[str, Instr] = {}
+    for cname, instrs in parsed.items():
+        for ins in instrs:
+            if "ROOT" in ins.line:
+                roots[cname] = ins
+    fused: set = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m and m.group(3) == "fusion":
+                mc = _CALLS_RE.search(line)
+                if mc:
+                    fused.add(mc.group(1))
+
+    # per-computation local cost + call edges
+    costs: Dict[str, CompCost] = {}
+    edges: Dict[str, List[Tuple[str, float, bool]]] = {}  # caller -> (callee, mult, is_while)
+    trip_counts: List[int] = []
+    n_while = 0
+    instr_recs: Dict[str, list] = {}
+    for cname, instrs in parsed.items():
+        cc = CompCost()
+        edges[cname] = []
+        recs = instr_recs.setdefault(cname, [])
+
+        def process(ins, cc=None, edges_c=None):
+            # returns (flops, bytes, wire, kind) for this instruction and
+            # appends call edges; kind is the collective kind or None.
+            op = ins.opcode
+            line = ins.line
+            if op == "while":
+                mt = _TRIP_RE.search(line)
+                trip = int(mt.group(1)) if mt else 1
+                trip_counts.append(trip)
+                if not mt:
+                    cc.unknown_trip += 1
+                mb = _BODY_RE.search(line)
+                mc = _COND_RE.search(line)
+                if mb:
+                    edges_c.append((mb.group(1), float(trip), True))
+                if mc:
+                    edges_c.append((mc.group(1), float(trip + 1), True))
+                return (0.0, 0.0, 0.0, "while")
+            if op in ("conditional",):
+                for mm in _BRANCHES_RE.finditer(line):
+                    for b in mm.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b:
+                            edges_c.append((b, 1.0, False))
+                for mm in _TRUE_FALSE_RE.finditer(line):
+                    edges_c.append((mm.group(1), 1.0, False))
+                return (0.0, 0.0, 0.0, None)
+            if op in ("fusion", "call", "async-start"):
+                mcalls = _CALLS_RE.search(line)
+                callee = mcalls.group(1) if mcalls else None
+                if callee:
+                    edges_c.append((callee, 1.0, False))
+                if op == "fusion":
+                    root = roots.get(callee)
+                    if root is not None and root.opcode == "dynamic-update-slice":
+                        rops = operand_names(root.line)
+                        upd = (_parse_shape(shapes[rops[1]])[1]
+                               if len(rops) >= 2 and rops[1] in shapes
+                               else root.out_bytes)
+                        return (0.0, 2 * upd, 0.0, None)
+                    return (0.0, ins.out_bytes + operand_bytes(line), 0.0, None)
+                return (0.0, 0.0, 0.0, None)
+
+            base_kind = op[:-6] if op.endswith("-start") else op
+            if base_kind in _COLL_KINDS:
+                out_b = ins.out_bytes
+                if op.endswith("-start"):
+                    out_b = out_b // 2 if base_kind != "all-reduce" else out_b
+                S = _group_size(line, n_devices)
+                w = _wire_bytes(base_kind, out_b, S)
+                return (0.0, 2 * out_b, w, base_kind)
+            if op.endswith("-done"):
+                return (0.0, 0.0, 0.0, None)
+            if op in _FREE_OPS:
+                if op == "custom-call":
+                    return (0.0, ins.out_bytes + operand_bytes(line), 0.0, None)
+                return (0.0, 0.0, 0.0, None)
+            if op == "dot":
+                mc_ = _CONTRACT_RE.search(line)
+                contract = 1
+                ops_ = operand_names(line)
+                if mc_ and ops_ and ops_[0] in shapes:
+                    dims = [int(x) for x in mc_.group(1).split(",") if x.strip()]
+                    toks = _SHAPE_TOK_RE.findall(shapes[ops_[0]])
+                    if toks:
+                        lhs_dims = [int(d) for d in toks[0][1].split(",") if d.strip()]
+                        for d in dims:
+                            if d < len(lhs_dims):
+                                contract *= lhs_dims[d]
+                return (2.0 * ins.out_elems * contract,
+                        ins.out_bytes + operand_bytes(line), 0.0, None)
+            if op == "convolution":
+                ops_ = operand_names(line)
+                per_out = 1.0
+                if len(ops_) >= 2 and ops_[1] in shapes:
+                    toks = _SHAPE_TOK_RE.findall(shapes[ops_[1]])
+                    if toks:
+                        kprod = 1
+                        for d in toks[0][1].split(","):
+                            if d.strip():
+                                kprod *= int(d)
+                        per_out = kprod / max(1, _last_feature_dim(ins.out_text))
+                return (2.0 * ins.out_elems * per_out,
+                        ins.out_bytes + operand_bytes(line), 0.0, None)
+            if op == "dynamic-update-slice":
+                ops_ = operand_names(line)
+                upd = (_parse_shape(shapes[ops_[1]])[1]
+                       if len(ops_) >= 2 and ops_[1] in shapes else ins.out_bytes)
+                return (0.0, 2 * upd, 0.0, None)
+            if op == "dynamic-slice":
+                return (0.0, 2 * ins.out_bytes, 0.0, None)
+            if op == "sort":
+                return (ins.out_elems * 8,
+                        2 * operand_bytes(line) + 2 * ins.out_bytes, 0.0, None)
+            # generic compute op (reduce, elementwise, copy, ...)
+            return (float(ins.out_elems),
+                    ins.out_bytes + operand_bytes(line), 0.0, None)
+
+        for ins in instrs:
+            if ins.opcode == "while":
+                n_while += 1
+            fl, by, wi, kind = process(ins, cc=cc, edges_c=edges[cname])
+            cc.flops += fl
+            cc.bytes += by
+            cc.wire_bytes += wi
+            if kind in _COLL_KINDS:
+                cc.coll_by_kind[kind] += wi
+            if by > 1e6 or wi > 1e6:
+                recs.append((by, wi, ins.line.strip()[:160]))
+        costs[cname] = cc
+
+    # propagate multipliers from entry
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry:
+        mult[entry] = 1.0
+    order = _topo_order(edges, entry)
+    for cname in order:
+        for callee, m, _ in edges.get(cname, []):
+            if callee in mult:
+                mult[callee] += mult[cname] * m
+
+    total = HloCost(0.0, 0.0, 0.0, {k: 0.0 for k in _COLL_KINDS},
+                    n_while, 0, trip_counts)
+    for cname, cc in costs.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 and cname != entry:
+            m = 0.0  # unreachable (dead computation)
+        total.flops += m * cc.flops
+        # fused computations: the fusion wrapper accounts boundary bytes;
+        # inner instructions contribute flops only.
+        if cname not in fused:
+            total.bytes += m * cc.bytes
+        total.wire_bytes += m * cc.wire_bytes
+        total.unknown_trip_whiles += cc.unknown_trip
+        for k in _COLL_KINDS:
+            total.coll_by_kind[k] += m * cc.coll_by_kind[k]
+
+    top_b, top_w = [], []
+    for cname, recs in instr_recs.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        skip_bytes = cname in fused
+        for by, wi, line in recs:
+            if by and not skip_bytes:
+                top_b.append((m * by, f"x{m:g} {line}"))
+            if wi:
+                top_w.append((m * wi, f"x{m:g} {line}"))
+    total.top_bytes = sorted(top_b, reverse=True)[:20]
+    total.top_wire = sorted(top_w, reverse=True)[:20]
+    return total
+
+
+def _last_feature_dim(out_text: str) -> int:
+    toks = _SHAPE_TOK_RE.findall(out_text)
+    if not toks:
+        return 1
+    dims = [int(d) for d in toks[0][1].split(",") if d.strip()]
+    return dims[-1] if dims else 1
+
+
+def _topo_order(edges: Dict[str, List[Tuple[str, float, bool]]],
+                entry: str) -> List[str]:
+    """DFS topological order from entry (call graphs are acyclic)."""
+    seen: Dict[str, int] = {}
+    order: List[str] = []
+
+    def visit(c: str):
+        if seen.get(c):
+            return
+        seen[c] = 1
+        for callee, _, _ in edges.get(c, []):
+            visit(callee)
+        order.append(c)
+
+    if entry:
+        visit(c=entry)
+    for c in edges:
+        visit(c)
+    order.reverse()
+    return order

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module does not touch jax device state.  The dry-run launcher forces 512
+host-platform devices before any jax import; smoke tests and benchmarks
+see the 1 real CPU device and use make_test_mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, found {len(devices)} — "
+            "launch via repro.launch.dryrun (XLA_FLAGS host device count)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
+    """Small mesh over whatever devices exist (CPU tests)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             devices=jax.devices()[: pod * data * model])
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
+
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,124 @@
+"""Dry-run spec assembly: per (arch x shape) abstract inputs + shardings.
+
+All state is jax.ShapeDtypeStruct (via eval_shape) — nothing allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.data import specs as dsp
+from repro.distributed.robust_allreduce import RobustAggConfig
+from repro.core.wfagg import WFAggConfig
+from repro.models import model as M
+from repro.train import serve as sv
+from repro.train import trainer as tr
+
+SLIDING_WINDOW_LONG = 8192
+
+
+def arch_variant(cfg: ArchConfig, shape: InputShape) -> Optional[ArchConfig]:
+    """Per-shape config adjustments.  Returns None when the (arch, shape)
+    cell is skipped (documented in DESIGN.md Section 6)."""
+    if shape.name == "long_500k":
+        if cfg.is_encoder_decoder:
+            return None  # seamless: enc-dec 500k-token target side — skipped
+        if cfg.family in ("ssm", "hybrid"):
+            return cfg  # natively sub-quadratic
+        # dense/moe/vlm: explicitly-flagged sliding-window variant
+        return dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def train_config(cfg: ArchConfig, multi_pod: bool,
+                 layout: str = "stacked") -> tr.TrainConfig:
+    """Mode selection (DESIGN.md Section 3): robust-dp WFAgg everywhere
+    except arctic-480b, whose K full gradient candidates cannot coexist in
+    pod HBM -> gspmd mean (single pod) documented as the technique's
+    materialization wall.
+
+    layout="flat" is the paper-shaped baseline (ravel + streamed chunks);
+    layout="stacked" is the sharded-gradient fast path (EXPERIMENTS.md
+    Section Perf) — gradients stay TP-sharded through aggregation and the
+    temporal filter is exact."""
+    if cfg.param_count() > 100e9:
+        return tr.TrainConfig(mode="gspmd", agg=RobustAggConfig(method="mean"),
+                              multi_pod=multi_pod, donate=False)
+    use_temporal = cfg.param_count() < 40e9 or layout == "stacked"
+    return tr.TrainConfig(
+        mode="robust_dp",
+        agg=RobustAggConfig(method="wfagg", layout=layout,
+                            wfagg=WFAggConfig(f=2, use_temporal=use_temporal)),
+        multi_pod=multi_pod,
+        donate=False,
+        # FSDP the train state for multi-billion-param archs (stacked only)
+        fsdp_params=(layout == "stacked" and cfg.param_count() > 2e9),
+        # microbatching measured NO temp-memory reduction in the dry-run
+        # accounting (EXPERIMENTS.md Section Perf, pair C iteration 3 —
+        # refuted); available via TrainConfig.microbatches but not
+        # auto-enabled.
+        microbatches=1,
+    )
+
+
+def build_dryrun(cfg: ArchConfig, shape: InputShape, mesh: Mesh, multi_pod: bool,
+                 layout: str = "flat"):
+    """Returns (jitted_fn, example_args (abstract, sharded)) for lowering."""
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        tc = train_config(cfg, multi_pod, layout=layout)
+        state_shape = tr.init_train_state(cfg, tc, key, mesh, abstract=True)
+        state_sh = tr.state_shardings(cfg, tc, mesh, state_shape)
+        batch_shape = dsp.train_specs(cfg, shape)
+        batch_sh = tr.batch_shardings(tc, mesh, batch_shape)
+        step = tr.build_train_step(cfg, tc, mesh)
+        args = (
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         state_shape, state_sh),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         batch_shape, batch_sh),
+        )
+        return step, args, {"mode": tc.mode, "agg": tc.agg.method}
+
+    sc = sv.ServeConfig(multi_pod=multi_pod)
+    params_shape = jax.eval_shape(lambda: M.init_params(cfg, key))
+    if shape.kind == "prefill":
+        pspecs, _ = sv.serve_shardings(cfg, sc, mesh, params_shape, {})
+        batch_shape = dsp.train_specs(cfg, shape)
+        batch_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, jax.sharding.PartitionSpec()), batch_shape)
+        from repro.distributed import sharding as shd
+        bsp = shd.batch_specs(batch_shape, data_axes=sc.data_axes(), mesh=mesh)
+        batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bsp)
+        fn = sv.build_prefill(cfg, sc, mesh)
+        args = (
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         params_shape, pspecs),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         batch_shape, batch_sh),
+        )
+        return fn, args, {"mode": "prefill"}
+
+    # decode
+    cache_shape = sv.cache_shapes(cfg, shape)
+    pspecs, cspecs = sv.serve_shardings(cfg, sc, mesh, params_shape, cache_shape)
+    tok_shape = dsp.decode_token_specs(cfg, shape)
+    from repro.distributed import sharding as shd
+    tok_sp = shd.batch_specs(tok_shape, data_axes=sc.data_axes(), mesh=mesh)
+    tok_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), tok_sp)
+    fn = sv.build_decode_step(cfg, sc, mesh)
+    args = (
+        jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                     params_shape, pspecs),
+        jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                     cache_shape, cspecs),
+        jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                     tok_shape, tok_sh),
+    )
+    return fn, args, {"mode": "decode"}

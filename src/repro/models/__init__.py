@@ -1,0 +1,14 @@
+"""Model zoo: unified config-driven architectures + the paper's CNN."""
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+from repro.models.lenet import (
+    init_lenet,
+    init_mlp_classifier,
+    lenet_fwd,
+    mlp_classifier_fwd,
+)

@@ -1,0 +1,76 @@
+"""The paper's local model: a LeNet-5-style CNN for 28x28 image
+classification (paper Section V-A: '7 layers, including convolutional,
+pooling, and fully connected').
+
+Pure-JAX functional implementation used by the DFL engine (mode A):
+small enough that 20 node replicas train concurrently on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_lenet(key: Array, num_classes: int = 10) -> Params:
+    ks = jax.random.split(key, 5)
+    def conv_init(k, shape):  # (kh, kw, cin, cout)
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+    def dense_init(k, shape):
+        return jax.random.normal(k, shape) * jnp.sqrt(2.0 / shape[0])
+    return {
+        "conv1": {"w": conv_init(ks[0], (5, 5, 1, 6)), "b": jnp.zeros((6,))},
+        "conv2": {"w": conv_init(ks[1], (5, 5, 6, 16)), "b": jnp.zeros((16,))},
+        "fc1": {"w": dense_init(ks[2], (16 * 4 * 4, 120)), "b": jnp.zeros((120,))},
+        "fc2": {"w": dense_init(ks[3], (120, 84)), "b": jnp.zeros((84,))},
+        "fc3": {"w": dense_init(ks[4], (84, num_classes)), "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x: Array, w: Array, b: Array) -> Array:
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def lenet_fwd(params: Params, images: Array) -> Array:
+    """images (B, 28, 28, 1) -> logits (B, C)."""
+    h = jax.nn.relu(_conv(images, params["conv1"]["w"], params["conv1"]["b"]))  # 24x24x6
+    h = _maxpool2(h)                                                            # 12x12x6
+    h = jax.nn.relu(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))       # 8x8x16
+    h = _maxpool2(h)                                                            # 4x4x16
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def init_mlp_classifier(key: Array, d_in: int = 784, width: int = 64, num_classes: int = 10) -> Params:
+    """Smaller alternative local model for fast CPU experiments."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": {"w": jax.random.normal(k1, (d_in, width)) * jnp.sqrt(2.0 / d_in),
+                "b": jnp.zeros((width,))},
+        "fc2": {"w": jax.random.normal(k2, (width, num_classes)) * jnp.sqrt(2.0 / width),
+                "b": jnp.zeros((num_classes,))},
+    }
+
+
+def mlp_classifier_fwd(params: Params, images: Array) -> Array:
+    """images (B, 28, 28, 1) or (B, 784) -> logits."""
+    h = images.reshape(images.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]

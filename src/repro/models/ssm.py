@@ -1,0 +1,171 @@
+"""State-space model blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training/prefill uses a parallel associative scan over the sequence
+(TPU-friendly: log2(S) sweeps of elementwise FMAs, no sequential HBM
+dependency).  Decode is a single O(1) state update — this is what makes
+the SSM/hybrid architectures run the long_500k shape natively.
+
+State conventions:
+  mamba1: h (B, d_inner, n)          A (d_inner, n) full matrix diag-init
+  mamba2: h (B, H, p, n)             A (H,) scalar per head (SSD)
+Both carry a causal-conv ring state (B, d_inner, conv-1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.logical import shard
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_mamba(cfg: ArchConfig, key: Array) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    p = {
+        "in_proj": _dense_init(ks[0], (d, 2 * di)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, di)),
+        "conv_b": jnp.zeros((di,)),
+        "out_proj": _dense_init(ks[2], (di, d)),
+        "D": jnp.ones((di,)) if cfg.ssm_variant == "mamba1" else jnp.ones((cfg.n_ssm_heads,)),
+    }
+    if cfg.ssm_variant == "mamba1":
+        dtr = cfg.dt_rank_
+        p.update(
+            x_proj=_dense_init(ks[3], (di, dtr + 2 * n)),
+            dt_proj=_dense_init(ks[4], (dtr, di), scale=dtr**-0.5),
+            dt_bias=jnp.log(jnp.expm1(jnp.exp(
+                jax.random.uniform(ks[5], (di,)) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+            ))),
+            A_log=jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        )
+    else:  # mamba2 (SSD): scalar A per head, head-wise dt
+        Hm = cfg.n_ssm_heads
+        p.update(
+            bc_proj=_dense_init(ks[3], (di, 2 * n)),
+            dt_proj=_dense_init(ks[4], (d, Hm), scale=0.02),
+            dt_bias=jnp.zeros((Hm,)),
+            A_log=jnp.log(jnp.linspace(1.0, 16.0, Hm)),
+            gnorm=jnp.ones((di,)),
+        )
+    return p
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype) -> Params:
+    di, n = cfg.d_inner_, cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)
+    if cfg.ssm_variant == "mamba1":
+        h = jnp.zeros((batch, di, n), jnp.float32)
+    else:
+        h = jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, n), jnp.float32)
+    return {"conv": conv, "h": h}
+
+
+def _causal_conv(cfg: ArchConfig, p: Params, x: Array, conv_state: Optional[Array]):
+    """Depthwise causal conv along S.  x (B,S,di).  Returns (y, new_state)."""
+    B, S, di = x.shape
+    kw = cfg.ssm_conv
+    if conv_state is None:
+        ctx = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        ctx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = ctx[:, -(kw - 1):, :]
+    w = p["conv_w"].astype(x.dtype)  # (kw, di)
+    y = sum(ctx[:, i : i + S, :] * w[i] for i in range(kw))
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def _assoc_scan(decay: Array, inp: Array) -> Array:
+    """First-order linear recurrence h_t = decay_t * h_{t-1} + inp_t along
+    axis 1 via an associative scan."""
+
+    def combine(a, b):
+        da, xa = a
+        db, xb = b
+        return da * db, xa * db + xb
+
+    _, h = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    return h
+
+
+def mamba_fwd(
+    cfg: ArchConfig,
+    p: Params,
+    x: Array,
+    state: Optional[Params] = None,
+) -> Tuple[Array, Optional[Params]]:
+    """Mamba block forward.  x (B,S,d).  state given -> stateful decode."""
+    B, S, d = x.shape
+    di, n = cfg.d_inner_, cfg.ssm_state
+    dt = x.dtype
+
+    xz = x @ p["in_proj"].astype(dt)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", "seq", "inner")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(cfg, p, xin, conv_state)
+    xc = jax.nn.silu(xc)
+
+    if cfg.ssm_variant == "mamba1":
+        dtr = cfg.dt_rank_
+        proj = xc @ p["x_proj"].astype(dt)  # (B,S,dtr+2n)
+        dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + n], axis=-1)
+        delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt))
+        A = -jnp.exp(p["A_log"]).astype(jnp.float32)  # (di,n)
+        deltaf = delta.astype(jnp.float32)
+        decay = jnp.exp(deltaf[..., None] * A[None, None])          # (B,S,di,n)
+        inp = (deltaf * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+        if state is None:
+            h = _assoc_scan(decay, inp)                             # (B,S,di,n)
+            new_h = None
+        else:
+            h0 = state["h"][:, None]                                # (B,1,di,n)
+            if S == 1:
+                h = decay * h0 + inp
+            else:
+                h = _assoc_scan(decay, inp)
+                h = h + decay.cumprod(axis=1) * h0  # fold initial state in
+            new_h = h[:, -1]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cc.astype(jnp.float32)).astype(dt)
+        y = y + xc * p["D"].astype(dt)
+    else:  # mamba2 / SSD
+        Hm, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+        bc = xc @ p["bc_proj"].astype(dt)
+        Bc, Cc = jnp.split(bc, 2, axis=-1)                          # (B,S,n) each
+        delta = jax.nn.softplus(x @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt))  # (B,S,Hm)
+        A = -jnp.exp(p["A_log"]).astype(jnp.float32)                # (Hm,)
+        xh = xc.reshape(B, S, Hm, hp)
+        deltaf = delta.astype(jnp.float32)
+        decay = jnp.exp(deltaf * A[None, None])                     # (B,S,Hm)
+        inp = (deltaf[..., None] * xh.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, None, :]
+        dec = decay[..., None, None]                                # (B,S,Hm,1,1)
+        if state is None:
+            h = _assoc_scan(dec, inp)                               # (B,S,Hm,hp,n)
+            new_h = None
+        else:
+            h0 = state["h"][:, None]
+            if S == 1:
+                h = dec * h0 + inp
+            else:
+                h = _assoc_scan(dec, inp)
+                h = h + dec.cumprod(axis=1) * h0
+            new_h = h[:, -1]
+        y = jnp.einsum("bshpn,bsn->bshp", h, Cc.astype(jnp.float32)).astype(dt)
+        y = y.reshape(B, S, di) + xc * jnp.repeat(p["D"].astype(dt), hp)
+        # grouped RMS norm (mamba2 normalizes before gating)
+        y = y * jax.lax.rsqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1, keepdims=True) + 1e-6).astype(dt)
+        y = y * p["gnorm"].astype(dt)
+
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "h": new_h}
+    return shard(out, "batch", "seq", "embed"), new_state

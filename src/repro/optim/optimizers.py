@@ -1,0 +1,161 @@
+"""Optimizers from scratch (optax is not available offline).
+
+API mirrors optax: ``opt = make_optimizer(cfg_or_name, **hp)`` giving
+  opt.init(params)                      -> state
+  opt.update(grads, state, params, lr)  -> (updates, new_state)
+where ``updates`` are ADDED to params (they already include the -lr).
+
+Implemented:
+  sgd        momentum SGD (paper Section V-A: momentum=0.9)
+  adamw      decoupled weight decay Adam
+  adafactor  factored second moments (production choice for >=14B params:
+             Adam moments for a 470B model do not fit 16 GB/chip)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], Tuple[Any, Any]]
+
+
+def _treemap2(f, a, b):
+    return jax.tree.map(f, a, b)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        mu = _treemap2(lambda m, g: momentum * m + g, state["mu"], grads)
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = _treemap2(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = _treemap2(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mh = m / c1
+            vh = v / c2
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (simplified: factored second moment, update clipping)
+# ---------------------------------------------------------------------------
+
+def adafactor(decay: float = 0.99, eps: float = 1e-30, clip_threshold: float = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        # second-moment stats stored as a flat list aligned with
+        # tree_leaves(params) order (factored leaves hold dicts).
+        def make(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": [make(p) for p in jax.tree.leaves(params)],
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if factored(p):
+                vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                new_v = {"vr": vr, "vc": vc}
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+            else:
+                vhat = decay * v["v"] + (1 - decay) * g2
+                new_v = {"v": vhat}
+            u = gf * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), new_v
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        outs = [upd(g, v, p) for g, v, p in zip(g_leaves, state["v"], p_leaves)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_v = [o[1] for o in outs]
+        return updates, {"v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name: str, **hp) -> Optimizer:
+    return OPTIMIZERS[name](**hp)
+
+
+# ---------------------------------------------------------------------------
+# LR schedule
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1) -> Callable[[Array], Array]:
+    def lr(step):
+        s = jnp.asarray(step).astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, s / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def constant_lr(v: float) -> Callable[[Array], Array]:
+    return lambda step: jnp.full((), v, jnp.float32)

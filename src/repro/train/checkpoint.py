@@ -1,0 +1,60 @@
+"""Pytree checkpointing without orbax: npz blobs + a JSON manifest.
+
+Layout:  <dir>/<name>.npz   flat arrays keyed by tree path
+         <dir>/<name>.json  treedef + shapes/dtypes + user metadata
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":
+            # numpy has no bfloat16: store extended dtypes as f32 (restore
+            # casts back to the dtype of the `like` leaf)
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, name: str, tree, metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    npz_path = os.path.join(directory, f"{name}.npz")
+    np.savez(npz_path, **flat)
+    manifest = {
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(directory, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return npz_path
+
+
+def restore_checkpoint(directory: str, name: str, like) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with open(os.path.join(directory, f"{name}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, f"{name}.npz"))
+    flat_like = _flatten_with_paths(like)
+    if sorted(flat_like) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_like)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    leaves = [jax.numpy.asarray(data[k]).astype(l.dtype) for k, l in zip(paths, leaves_like)]
+    return treedef.unflatten(leaves), manifest["metadata"]

@@ -1,0 +1,79 @@
+"""Serving step builders: prefill + single-token decode.
+
+Decode shapes (decode_32k, long_500k) lower ``serve_step``: ONE new token
+against a KV cache (or SSM state) of seq_len positions.  Params are
+FSDP+TP sharded over both mesh axes (no gradient state — weights
+all-gather per layer under GSPMD), the cache is batch-sharded over
+'data'/'pod' and head-sharded over 'model'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.data.specs import ENC_LEN_DECODE
+from repro.distributed import sharding as shd
+from repro.distributed.logical import use_sharding
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    multi_pod: bool = False
+
+    def data_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+def serve_rules(sc: ServeConfig):
+    rules = shd.activation_rules("gspmd", sc.multi_pod)
+    return rules
+
+
+def cache_shapes(cfg: ArchConfig, shape: InputShape) -> Any:
+    """Abstract decode-cache pytree for an input shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: M.init_cache(
+            cfg, shape.global_batch, shape.seq_len,
+            enc_len=ENC_LEN_DECODE if cfg.is_encoder_decoder else 0,
+        )
+    )
+
+
+def build_decode_step(cfg: ArchConfig, sc: ServeConfig, mesh: Mesh) -> Callable:
+    """jitted fn(params, cache, tokens (B,1)) -> (logits, new_cache)."""
+    rules = serve_rules(sc)
+
+    def fn(params, cache, tokens):
+        if isinstance(tokens, dict):
+            tokens = tokens["tokens"]
+        with use_sharding(mesh, rules):
+            return M.decode_step(cfg, params, cache, tokens)
+
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+def build_prefill(cfg: ArchConfig, sc: ServeConfig, mesh: Mesh) -> Callable:
+    """jitted fn(params, batch) -> logits (full-sequence forward)."""
+    rules = serve_rules(sc)
+
+    def fn(params, batch):
+        with use_sharding(mesh, rules):
+            logits, _ = M.forward(cfg, params, batch)
+            return logits
+
+    return jax.jit(fn)
+
+
+def serve_shardings(cfg: ArchConfig, sc: ServeConfig, mesh: Mesh,
+                    params_shape: Any, cache_shape: Any):
+    data_axes = sc.data_axes()
+    ns = lambda s: NamedSharding(mesh, s)
+    pspecs = jax.tree.map(ns, shd.param_specs(cfg, params_shape, fsdp=True, data_axes=data_axes, mesh=mesh))
+    cspecs = jax.tree.map(ns, shd.cache_specs(cfg, cache_shape, data_axes=data_axes, mesh=mesh))
+    return pspecs, cspecs
