@@ -3,13 +3,18 @@ Section IV): wall-time per aggregation call vs (K, d), for every rule,
 plus the Pallas kernel paths (interpret mode on CPU — correctness-grade
 timing, the TPU number comes from the roofline).
 
-The derived column reports bytes touched per call / wall time = effective
-CPU bandwidth, a sanity proxy for the O(dK log K) complexity claim.
+Each row carries the execution ``backend`` and the analytic ``passes``
+column — the number of (K, d)-sized HBM passes per aggregation (see
+src/repro/kernels/README.md for the accounting).  The full-WFAgg rule is
+measured under BOTH backends so the fused-vs-reference pass-count win is
+visible in every run, and every invocation appends its rows to the
+``BENCH_agg.json`` trajectory so later PRs can regress against it.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, List
 
@@ -18,6 +23,9 @@ import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
 from repro.core import wfagg as wf
+
+HERE = os.path.dirname(__file__)
+TRAJECTORY = os.path.join(HERE, "BENCH_agg.json")
 
 
 def _timeit(fn, *args, reps: int = 5) -> float:
@@ -28,6 +36,20 @@ def _timeit(fn, *args, reps: int = 5) -> float:
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+def _row(rule: str, K: int, d: int, us: float, backend: str,
+         passes: int | None = None, read_factor: float = 1.0) -> Dict:
+    """``read_factor`` scales the bytes-touched estimate for calls that
+    stream more than one (K, d) tensor (batched launch, +prev input)."""
+    r = {
+        "rule": rule, "K": K, "d": d, "us_per_call": round(us, 1),
+        "backend": backend,
+        "GBps": round(read_factor * 4e-3 * K * d / max(us, 1e-9), 2),
+    }
+    if passes is not None:
+        r["passes"] = passes
+    return r
 
 
 def bench_rules(K: int, d: int) -> List[Dict]:
@@ -49,43 +71,62 @@ def bench_rules(K: int, d: int) -> List[Dict]:
     }
     for name, fn in cases.items():
         us = _timeit(fn, updates) * 1e6
-        rows.append({
-            "rule": name, "K": K, "d": d, "us_per_call": round(us, 1),
-            "GBps": round(4e-3 * K * d / max(us, 1e-9), 2),
-        })
+        rows.append(_row(name, K, d, us, "reference"))
 
-    # full WFAgg (3 filters + weighting + smoothing)
-    wcfg = wf.WFAggConfig()
-    tstate = wf.init_temporal_state(K, d, wcfg.window)
-    fn = jax.jit(lambda loc, u, ts: wf.wfagg(loc, u, ts, wcfg)[0])
-    us = _timeit(fn, local, updates, tstate) * 1e6
-    rows.append({"rule": "wfagg", "K": K, "d": d, "us_per_call": round(us, 1),
-                 "GBps": round(4e-3 * K * d / max(us, 1e-9), 2)})
+    # full WFAgg (3 filters + weighting + smoothing), both backends
+    for backend in ("reference", "fused"):
+        wcfg = wf.WFAggConfig(backend=backend)
+        tstate = wf.init_temporal_state(K, d, wcfg.window)
+        fn = jax.jit(lambda loc, u, ts, w=wcfg: wf.wfagg(loc, u, ts, w)[0])
+        us = _timeit(fn, local, updates, tstate) * 1e6
+        rows.append(_row(f"wfagg[{backend}]", K, d, us, backend,
+                         passes=wf.memory_passes(wcfg)))
     return rows
 
 
 def bench_kernels(K: int, d: int) -> List[Dict]:
     from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
-    from repro.kernels.robust_stats.ops import robust_stats
+    from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
     from repro.kernels.weighted_agg.ops import weighted_agg
 
     key = jax.random.PRNGKey(1)
     updates = jax.random.normal(key, (K, d), jnp.float32)
+    prev = jax.random.normal(jax.random.PRNGKey(2), (K, d), jnp.float32)
+    batch = jnp.stack([updates] * 4)
     local = updates[0]
     weights = jnp.ones((K,), jnp.float32)
     rows = []
-    for name, fn in (
-        ("robust_stats[pallas-interp]", lambda: robust_stats(updates)),
-        ("robust_stats[jnp-ref]", lambda: robust_stats(updates, use_kernel=False)),
-        ("pairwise[pallas-interp]", lambda: pairwise_sq_dists(updates)),
-        ("pairwise[jnp-ref]", lambda: pairwise_sq_dists(updates, use_kernel=False)),
-        ("weighted_agg[pallas-interp]", lambda: weighted_agg(local, updates, weights)),
-        ("weighted_agg[jnp-ref]", lambda: weighted_agg(local, updates, weights, use_kernel=False)),
+    for name, backend, factor, fn in (
+        ("robust_stats[pallas]", "fused", 1.0, lambda: robust_stats(updates)),
+        ("robust_stats+prev[pallas]", "fused", 2.0, lambda: robust_stats(updates, prev)),
+        ("robust_stats_batch4[pallas]", "fused", 4.0, lambda: robust_stats_batch(batch)),
+        ("robust_stats[jnp-ref]", "reference", 1.0, lambda: robust_stats(updates, use_kernel=False)),
+        ("pairwise[pallas]", "fused", 1.0, lambda: pairwise_sq_dists(updates)),
+        ("pairwise[jnp-ref]", "reference", 1.0, lambda: pairwise_sq_dists(updates, use_kernel=False)),
+        ("weighted_agg[pallas]", "fused", 1.0, lambda: weighted_agg(local, updates, weights)),
+        ("weighted_agg[jnp-ref]", "reference", 1.0, lambda: weighted_agg(local, updates, weights, use_kernel=False)),
     ):
         us = _timeit(fn, reps=3) * 1e6
-        rows.append({"rule": name, "K": K, "d": d, "us_per_call": round(us, 1),
-                     "GBps": round(4e-3 * K * d / max(us, 1e-9), 2)})
+        rows.append(_row(name, K, d, us, backend, read_factor=factor))
     return rows
+
+
+def append_trajectory(rows: List[Dict], path: str = TRAJECTORY) -> None:
+    """Append one benchmark snapshot to the BENCH_agg.json trajectory."""
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_backend": jax.default_backend(),
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
 
 
 def main(argv=None) -> List[Dict]:
@@ -93,6 +134,11 @@ def main(argv=None) -> List[Dict]:
     ap.add_argument("--sizes", default="8x100000,16x100000,16x1000000")
     ap.add_argument("--kernels", action="store_true", help="include Pallas paths")
     ap.add_argument("--out", default="")
+    ap.add_argument("--bench-json", default="",
+                    help="trajectory file to append to (opt-in — "
+                         "benchmarks/run.py passes benchmarks/BENCH_agg.json; "
+                         "ad-hoc/smoke runs default to not touching the "
+                         "committed baseline)")
     args = ap.parse_args(argv)
     rows: List[Dict] = []
     for tok in args.sizes.split(","):
@@ -101,11 +147,15 @@ def main(argv=None) -> List[Dict]:
         if args.kernels:
             rows += bench_kernels(K, min(d, 200_000))
     for r in rows:
+        passes = f" passes={r['passes']}" if "passes" in r else ""
         print(f"{r['rule']:28s} K={r['K']:3d} d={r['d']:8d} "
-              f"{r['us_per_call']:10.1f} us  {r['GBps']:7.2f} GB/s")
+              f"{r['us_per_call']:10.1f} us  {r['GBps']:7.2f} GB/s"
+              f"  [{r['backend']}]{passes}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1)
+    if args.bench_json:
+        append_trajectory(rows, args.bench_json)
     return rows
 
 

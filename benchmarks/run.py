@@ -51,7 +51,10 @@ def main() -> None:
         print("=" * 72)
         print("== aggregation microbenchmark ==")
         from benchmarks import agg_microbench
-        argv = ["--out", os.path.join(HERE, "out_microbench.json")]
+        # every run appends to the BENCH_agg.json trajectory so future
+        # PRs have a perf baseline (rule, K, d, us_per_call, backend)
+        argv = ["--out", os.path.join(HERE, "out_microbench.json"),
+                "--bench-json", os.path.join(HERE, "BENCH_agg.json")]
         if args.full:
             argv.append("--kernels")
         results["microbench"] = agg_microbench.main(argv)

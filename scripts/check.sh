@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate + benchmark smoke: run before merging.
+#
+#   ./scripts/check.sh          tier-1 tests + smoke-size microbench
+#   FAST=1 ./scripts/check.sh   skip the slow end-to-end trainer tests
+#
+# The microbench invocation exercises the Pallas kernel paths (fused
+# robust_stats incl. the batched and +prev variants) at a smoke size so
+# the bench path itself cannot rot silently.  Smoke rows are NOT
+# appended to the committed benchmarks/BENCH_agg.json baseline — real
+# trajectory entries come from `python -m benchmarks.run`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${FAST:-0}" == "1" ]]; then
+  python -m pytest -x -q -m "not slow"
+else
+  python -m pytest -x -q
+fi
+
+python benchmarks/agg_microbench.py --kernels --sizes 8x4096
+echo "check.sh: OK"

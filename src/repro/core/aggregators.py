@@ -92,14 +92,23 @@ def trimmed_mean_agg(updates: Array, beta: float = 0.1) -> Tuple[Array, Array]:
     return jnp.mean(srt, axis=0), jnp.ones((K,), dtype=bool)
 
 
-def krum_scores(updates: Array, f: int) -> Array:
-    """Krum score per candidate: sum of sq-dists to its K-f-2 closest peers."""
-    K = updates.shape[0]
-    d2 = pairwise_sq_dists(updates)
+def krum_scores_from_sq_dists(d2: Array, f: int) -> Array:
+    """Krum scores from a precomputed (K, K) squared-distance matrix.
+
+    Shared by the jnp path, the Gram-statistics path in
+    ``distributed.robust_allreduce`` and the fused Pallas backend in
+    ``core.wfagg`` (which all obtain d2 differently but score identically).
+    """
+    K = d2.shape[0]
     d2 = d2 + jnp.diag(jnp.full((K,), jnp.inf, dtype=d2.dtype))
     n_closest = max(1, K - int(f) - 2)
     neg_small, _ = jax.lax.top_k(-d2, n_closest)  # per row
     return -neg_small.sum(axis=-1)
+
+
+def krum_scores(updates: Array, f: int) -> Array:
+    """Krum score per candidate: sum of sq-dists to its K-f-2 closest peers."""
+    return krum_scores_from_sq_dists(pairwise_sq_dists(updates), f)
 
 
 def krum_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
@@ -118,17 +127,16 @@ def multi_krum_agg(updates: Array, f: int = 2, m: int | None = None) -> Tuple[Ar
     return masked_mean(updates, mask), mask
 
 
-def clustering_select(updates: Array) -> Array:
-    """Agglomerative (average linkage, cosine distance) into 2 clusters.
-
-    Returns the boolean mask of the LARGER cluster.  Uses the
-    Lance-Williams recurrence so the merge loop is jit-compatible with
-    static candidate count K.
+def clustering_select_from_dist(D0: Array) -> Array:
+    """Agglomerative 2-way clustering (average linkage) on a precomputed
+    (K, K) distance matrix; returns the boolean mask of the LARGER
+    cluster.  Uses the Lance-Williams recurrence so the merge loop is
+    jit-compatible with static candidate count K.  Shared by the jnp
+    path, the Gram-statistics path and the fused Pallas backend.
     """
-    K = updates.shape[0]
+    K = D0.shape[0]
     if K <= 2:
         return jnp.ones((K,), dtype=bool)
-    D0 = cosine_distance_matrix(updates)
     eye = jnp.eye(K, dtype=bool)
 
     def merge_step(carry, _):
@@ -152,6 +160,11 @@ def clustering_select(updates: Array) -> Array:
     (_, _, sizes, assign), _ = jax.lax.scan(merge_step, init, None, length=K - 2)
     big = jnp.argmax(sizes)  # slot of the larger of the two surviving clusters
     return assign == big
+
+
+def clustering_select(updates: Array) -> Array:
+    """2-way agglomerative clustering of the candidates (cosine distance)."""
+    return clustering_select_from_dist(cosine_distance_matrix(updates))
 
 
 def clustering_agg(updates: Array) -> Tuple[Array, Array]:

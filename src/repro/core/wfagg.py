@@ -14,6 +14,16 @@ All selectors take ``updates: (K, d)`` and return boolean masks ``(K,)``;
 everything is jit/vmap-safe with static K, so the same code runs per-node
 in the mode-A DFL engine and (chunked) inside the mode-B multi-pod
 training step.
+
+Execution backends (``WFAggConfig.backend``):
+  reference  the plain-jnp pipeline above — each filter reads the (K, d)
+             candidate matrix again (~7 full passes per aggregation)
+  fused      one ``robust_stats`` Pallas launch computes every filter
+             statistic in a single read of the candidates (+ one read of
+             the previous round for WFAgg-T); only O(K)/O(K^2) logic runs
+             in plain jnp, and the WFAgg-E combine is the second and last
+             (K, d)-sized pass.  ``wfagg_batch`` extends this to all N
+             nodes of a gossip round in one kernel launch.
 """
 from __future__ import annotations
 
@@ -24,6 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators as agg
+from repro.kernels.pairwise_dist.ops import pairwise_gram
+from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
+from repro.kernels.robust_stats.ref import RobustStats
+from repro.kernels.weighted_agg.ops import weighted_agg
 
 Array = jax.Array
 _EPS = 1e-12
@@ -46,6 +60,10 @@ class WFAggConfig:
     distance_filter: str = "wfagg_d"     # or "multi_krum"
     similarity_filter: str = "wfagg_c"   # or "clustering"
     multi_krum_m: Optional[int] = None   # Multi-Krum m (default K//4)
+    # Execution backend: "fused" (single-pass Pallas filter bank) or
+    # "reference" (plain-jnp multi-pass pipeline).  Same masks/aggregate
+    # up to float tolerance; see memory_passes() for the traffic model.
+    backend: str = "fused"
 
     @property
     def accept_threshold(self) -> float:
@@ -162,6 +180,11 @@ def wfagg_t_select(state: TemporalState, updates: Array, cfg: WFAggConfig) -> Tu
     still accumulated so the window is warm when the filter activates.
     """
     prev = state.prev
+    # Both backends share this elementwise metric pass: standalone WFAgg-T
+    # is already single-pass in jnp, so launching the robust_stats kernel
+    # here would pay the sorting network for outputs nobody reads.  The
+    # fused gain for the temporal metrics comes from the FULL wfagg
+    # pipeline, where _wfagg_fused folds them into the shared kernel pass.
     s_t = jnp.sum((updates - prev) ** 2, axis=-1)
     num = jnp.sum(updates * prev, axis=-1)
     den = jnp.maximum(
@@ -222,6 +245,94 @@ def _similarity_mask(updates: Array, cfg: WFAggConfig) -> Array:
     raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
 
 
+# ---------------------------------------------------------------------------
+# fused backend: one-pass filter bank on the robust_stats Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _sq_dists_from_gram(gram: Array, norm2: Array) -> Array:
+    """(K, K) squared distances from a Gram matrix + squared norms."""
+    d2 = norm2[..., :, None] + norm2[..., None, :] - 2.0 * gram
+    K = gram.shape[-1]
+    d2 = d2 * (1.0 - jnp.eye(K, dtype=d2.dtype))
+    return jnp.maximum(d2, 0.0)
+
+
+def _cosine_dist_from_gram(gram: Array, norm2: Array) -> Array:
+    """(K, K) cosine distance matrix from a Gram matrix + squared norms."""
+    n = jnp.sqrt(jnp.maximum(norm2, _EPS))
+    return 1.0 - gram / jnp.maximum(n[..., :, None] * n[..., None, :], _EPS)
+
+
+def _fused_distance_mask(stats: RobustStats, gram: Optional[Array],
+                         cfg: WFAggConfig) -> Array:
+    K = stats.dist2.shape[-1]
+    if cfg.distance_filter == "wfagg_d":
+        return agg.smallest_k_mask(stats.dist2, K - int(cfg.f) - 1)
+    if cfg.distance_filter == "multi_krum":
+        scores = agg.krum_scores_from_sq_dists(
+            _sq_dists_from_gram(gram, stats.norm2), cfg.f)
+        m = cfg.multi_krum_m or max(1, K // 4)
+        return agg.smallest_k_mask(scores, m)
+    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
+
+
+def _fused_similarity_mask(stats: RobustStats, gram: Optional[Array],
+                           cfg: WFAggConfig) -> Array:
+    K = stats.dist2.shape[-1]
+    if cfg.similarity_filter == "wfagg_c":
+        # cosine to the median model is invariant to the norm clipping of
+        # Alg. 3, so the fused filter ranks the kernel's dot/norm stats
+        # directly — same selection as wfagg_c_select.
+        return agg.smallest_k_mask(stats.cosine_to_median(), K - int(cfg.f) - 1)
+    if cfg.similarity_filter == "clustering":
+        return agg.clustering_select_from_dist(
+            _cosine_dist_from_gram(gram, stats.norm2))
+    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+
+
+def _needs_gram(cfg: WFAggConfig) -> bool:
+    return cfg.distance_filter == "multi_krum" or cfg.similarity_filter == "clustering"
+
+
+def _wfagg_fused(
+    local: Array,
+    updates: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Single-node fused WFAgg: every filter statistic from ONE read of the
+    candidates (robust_stats kernel; + the pairwise Gram kernel when the
+    Alt-WFAgg filters need the (K, K) distances), one more read for the
+    fused WFAgg-E combine."""
+    temporal = cfg.use_temporal and state is not None
+    prev = state.prev if temporal else None
+    # need_center=False: the filter bank consumes only the O(K)
+    # accumulators, so the kernel skips its (D,)-sized median/trim writes
+    stats = robust_stats(updates, prev=prev, need_center=False)
+    gram = pairwise_gram(updates)[0] if _needs_gram(cfg) else None
+    mask_d = _fused_distance_mask(stats, gram, cfg)
+    mask_c = _fused_similarity_mask(stats, gram, cfg)
+    if temporal:
+        mask_t, hist_s, hist_b, count, t = wfagg_t_decide(
+            state.hist_s, state.hist_b, state.count, state.t,
+            stats.prev_dist2, stats.cosine_to_prev(), cfg)
+        new_state = TemporalState(prev=updates, hist_s=hist_s, hist_b=hist_b,
+                                  count=count, t=t)
+    else:
+        mask_t = jnp.zeros((updates.shape[0],), dtype=bool)
+        new_state = state
+    weights = wfagg_scores(mask_d, mask_c, mask_t, cfg)
+    out = weighted_agg(local, updates, weights, alpha=cfg.alpha)
+    info = {
+        "mask_d": mask_d,
+        "mask_c": mask_c,
+        "mask_t": mask_t,
+        "weights": weights,
+        "n_accepted": (weights > 0).sum(),
+    }
+    return out, new_state, info
+
+
 def wfagg(
     local: Array,
     updates: Array,
@@ -229,6 +340,10 @@ def wfagg(
     cfg: WFAggConfig,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Full WFAgg (Alg. 1).  Returns (aggregated, new_state, info)."""
+    if cfg.backend == "fused":
+        return _wfagg_fused(local, updates, state, cfg)
+    if cfg.backend != "reference":
+        raise ValueError(f"unknown backend {cfg.backend!r}")
     mask_d = _distance_mask(updates, cfg)
     mask_c = _similarity_mask(updates, cfg)
     if cfg.use_temporal and state is not None:
@@ -248,19 +363,114 @@ def wfagg(
     return out, new_state, info
 
 
+def wfagg_batch(
+    local: Array,
+    updates: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Batched full WFAgg over all N receiving nodes of a gossip round.
+
+    ``local (N, d)``, ``updates (N, K, d)``, ``state`` with a leading N
+    axis on every leaf.  The fused backend runs ONE robust_stats kernel
+    launch with a 2-D (node, D-block) grid — a vmap of single-node Pallas
+    calls would serialize into an outer per-node loop instead — and one
+    batched combine; only the O(K)/O(K^2) mask logic is vmapped.  The
+    reference backend vmaps the plain-jnp pipeline (same semantics,
+    multi-pass traffic).
+    """
+    if cfg.backend == "reference":
+        if state is not None:
+            return jax.vmap(lambda l, u, s: wfagg(l, u, s, cfg))(
+                local, updates, state)
+        out, _, info = jax.vmap(lambda l, u: wfagg(l, u, None, cfg))(
+            local, updates)
+        return out, None, info
+    if cfg.backend != "fused":
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+
+    N, K, _ = updates.shape
+    temporal = cfg.use_temporal and state is not None
+    prev = state.prev if temporal else None
+    stats = robust_stats_batch(updates, prev=prev, need_center=False)
+    gram = None
+    if _needs_gram(cfg):
+        # one extra read of the candidates: batched Gram via the MXU
+        gram = jnp.einsum("nkd,njd->nkj", updates, updates,
+                          preferred_element_type=jnp.float32)
+    if gram is not None:
+        mask_d = jax.vmap(lambda s, g: _fused_distance_mask(s, g, cfg))(stats, gram)
+        mask_c = jax.vmap(lambda s, g: _fused_similarity_mask(s, g, cfg))(stats, gram)
+    else:
+        mask_d = jax.vmap(lambda s: _fused_distance_mask(s, None, cfg))(stats)
+        mask_c = jax.vmap(lambda s: _fused_similarity_mask(s, None, cfg))(stats)
+    if temporal:
+        mask_t, hist_s, hist_b, count, t = jax.vmap(
+            lambda hs, hb, c, tt, s, b: wfagg_t_decide(hs, hb, c, tt, s, b, cfg)
+        )(state.hist_s, state.hist_b, state.count, state.t,
+          stats.prev_dist2, stats.cosine_to_prev())
+        new_state = TemporalState(prev=updates, hist_s=hist_s, hist_b=hist_b,
+                                  count=count, t=t)
+    else:
+        mask_t = jnp.zeros((N, K), dtype=bool)
+        new_state = state
+    weights = wfagg_scores(mask_d, mask_c, mask_t, cfg)
+    # batched WFAgg-E combine: the second and last (K, d)-sized pass
+    out = jax.vmap(lambda l, u, w: wfagg_e(l, u, w, cfg.alpha))(
+        local, updates, weights)
+    info = {
+        "mask_d": mask_d,
+        "mask_c": mask_c,
+        "mask_t": mask_t,
+        "weights": weights,
+        "n_accepted": (weights > 0).sum(axis=-1),
+    }
+    return out, new_state, info
+
+
+def memory_passes(cfg: WFAggConfig) -> int:
+    """Number of (K, d)-sized HBM passes per full-WFAgg aggregation.
+
+    reference: each filter re-reads the candidates — distance filter
+    (median sort + distances = 2, or 1 Gram pass for Multi-Krum),
+    similarity filter (median + norms/clip + cosine dots = 3, or 1 Gram
+    pass for Clustering), temporal metrics (1), WFAgg-E combine (1).
+    fused: ONE robust_stats read covers D/C/T statistics, plus the
+    combine (+ 1 Gram pass only when an Alt-WFAgg filter needs K x K
+    distances).  See kernels/README.md for the accounting.
+    """
+    t = 1 if cfg.use_temporal else 0
+    if cfg.backend == "fused":
+        return 2 + (1 if _needs_gram(cfg) else 0)
+    d_passes = 1 if cfg.distance_filter == "multi_krum" else 2
+    c_passes = 1 if cfg.similarity_filter == "clustering" else 3
+    return d_passes + c_passes + t + 1
+
+
 def alt_wfagg_config(**kw) -> WFAggConfig:
     """Alt-WFAgg (paper SsVI-B2): Multi-Krum + Clustering as the filters."""
     return WFAggConfig(distance_filter="multi_krum", similarity_filter="clustering", **kw)
 
 
 # Standalone aggregators (Table I columns WFAgg-D / WFAgg-C / WFAgg-E / WFAgg-T)
-def wfagg_d_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
-    mask = wfagg_d_select(updates, f)
+def wfagg_d_agg(updates: Array, f: int = 2,
+                backend: str = "reference") -> Tuple[Array, Array]:
+    if backend == "fused":
+        stats = robust_stats(updates, need_center=False)
+        mask = agg.smallest_k_mask(stats.dist2, updates.shape[0] - int(f) - 1)
+    else:
+        mask = wfagg_d_select(updates, f)
     return agg.masked_mean(updates, mask), mask
 
 
-def wfagg_c_agg(updates: Array, f: int = 2) -> Tuple[Array, Array]:
-    mask = wfagg_c_select(updates, f)
+def wfagg_c_agg(updates: Array, f: int = 2,
+                backend: str = "reference") -> Tuple[Array, Array]:
+    if backend == "fused":
+        stats = robust_stats(updates, need_center=False)
+        mask = agg.smallest_k_mask(stats.cosine_to_median(),
+                                   updates.shape[0] - int(f) - 1)
+    else:
+        mask = wfagg_c_select(updates, f)
     return agg.masked_mean(updates, mask), mask
 
 

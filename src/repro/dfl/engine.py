@@ -45,12 +45,17 @@ class DFLConfig:
     paper: PaperDFLConfig = PaperDFLConfig()
     batches_per_round: int = 4
     seed: int = 0
+    # WFAgg execution backend: "fused" runs the whole gossip round's
+    # aggregations through one robust_stats kernel launch (see
+    # core.wfagg.wfagg_batch); "reference" keeps the multi-pass jnp path.
+    wfagg_backend: str = "fused"
 
-    def wfagg_config(self, use_temporal=True) -> wf.WFAggConfig:
+    def wfagg_config(self, use_temporal=True, backend: Optional[str] = None) -> wf.WFAggConfig:
         p = self.paper
         return wf.WFAggConfig(
             f=p.f, tau1=p.tau1, tau2=p.tau2, tau3=p.tau3, alpha=p.alpha,
             window=p.window, transient=p.transient, use_temporal=use_temporal,
+            backend=backend or self.wfagg_backend,
         )
 
 
@@ -164,10 +169,26 @@ def _apply_attacks(cfg: DFLConfig, topo: Topology, flat_models: Array, rnd: Arra
 # aggregation dispatch
 # ---------------------------------------------------------------------------
 
+def _wfagg_full_config(cfg: DFLConfig, K: int,
+                       backend: Optional[str] = None) -> wf.WFAggConfig:
+    """WFAggConfig for the full wfagg/alt_wfagg pipeline at candidate count K."""
+    wcfg = cfg.wfagg_config(backend=backend)
+    if cfg.aggregator == "alt_wfagg":
+        wcfg = dataclasses.replace(
+            wcfg, distance_filter="multi_krum", similarity_filter="clustering",
+            multi_krum_m=max(1, int(cfg.paper.multi_krum_m_frac * K)),
+        )
+    return wcfg
+
+
 def _aggregate_one(cfg: DFLConfig, local: Array, updates: Array,
-                   t_state: Optional[wf.TemporalState]):
+                   t_state: Optional[wf.TemporalState],
+                   wfagg_backend: Optional[str] = None):
     """Aggregate K received models for one node.  Returns (new_model,
-    new_temporal_state)."""
+    new_temporal_state).  ``wfagg_backend`` overrides the configured WFAgg
+    backend — the vmapped per-node call sites force "reference" because a
+    vmap of the fused Pallas path serializes node-by-node (the batched
+    fused route is ``wf.wfagg_batch`` in build_round_fn)."""
     p = cfg.paper
     name = cfg.aggregator
     K = updates.shape[0]
@@ -190,16 +211,12 @@ def _aggregate_one(cfg: DFLConfig, local: Array, updates: Array,
     if name == "wfagg_e":
         return wf.wfagg_e_agg(local, updates, p.alpha), t_state
     if name == "wfagg_t":
-        mask, new_t = wf.wfagg_t_select(t_state, updates, cfg.wfagg_config())
+        mask, new_t = wf.wfagg_t_select(
+            t_state, updates, cfg.wfagg_config(backend=wfagg_backend))
         out = wf.wfagg_e(local, updates, mask.astype(jnp.float32), p.alpha)
         return out, new_t
     if name in ("wfagg", "alt_wfagg"):
-        wcfg = cfg.wfagg_config()
-        if name == "alt_wfagg":
-            wcfg = dataclasses.replace(
-                wcfg, distance_filter="multi_krum", similarity_filter="clustering",
-                multi_krum_m=max(1, int(p.multi_krum_m_frac * K)),
-            )
+        wcfg = _wfagg_full_config(cfg, K, backend=wfagg_backend)
         out, new_t, _ = wf.wfagg(local, updates, t_state, wcfg)
         return out, new_t
     raise ValueError(name)
@@ -235,9 +252,16 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Cal
             )
         else:
             gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
-            if state.temporal is not None:
+            if cfg.aggregator in ("wfagg", "alt_wfagg"):
+                # all N per-node aggregations in one fused kernel launch
+                # (or one vmapped jnp pipeline under backend="reference")
+                wcfg = _wfagg_full_config(cfg, topo.degree)
+                new_flat, new_temporal, _ = wf.wfagg_batch(
+                    flat, gathered, state.temporal, wcfg)
+            elif state.temporal is not None:
                 new_flat, new_temporal = jax.vmap(
-                    lambda loc, upd, ts: _aggregate_one(cfg, loc, upd, ts)
+                    lambda loc, upd, ts: _aggregate_one(
+                        cfg, loc, upd, ts, wfagg_backend="reference")
                 )(flat, gathered, state.temporal)
             else:
                 new_flat, _ = jax.vmap(

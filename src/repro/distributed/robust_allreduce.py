@@ -37,7 +37,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
-from repro.core.wfagg import TemporalState, WFAggConfig, wfagg_scores, wfagg_t_select
+from repro.core.wfagg import (
+    TemporalState, WFAggConfig, wfagg_scores, wfagg_t_decide, wfagg_t_select)
+from repro.kernels.pairwise_dist.ops import pairwise_gram
+from repro.kernels.robust_stats.ops import robust_stats
 
 Array = jax.Array
 AxisNames = Union[str, Tuple[str, ...]]
@@ -67,6 +70,13 @@ class RobustAggConfig:
     layout: str = "flat"
     gather_dtype: Optional[str] = None   # e.g. "bfloat16": gather candidates
                                          # in low precision (stats stay f32)
+    # statistics backend for layout='stacked': "fused" computes every
+    # filter statistic (incl. exact WFAgg-T metrics) through the one-pass
+    # robust_stats Pallas kernel over the concatenated (K, P) candidates;
+    # "reference" keeps the per-leaf jnp loop.  The fused path assumes the
+    # candidates fit one process (mode-A scale / shard_map-manual regions);
+    # pure-GSPMD multi-pod sharding of the kernel is an open item.
+    backend: str = "reference"
 
     @property
     def needs_stats(self) -> bool:
@@ -111,7 +121,9 @@ def my_index(axis: AxisNames) -> Array:
     axes = _axes_tuple(axis)
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        # psum-of-1 rather than jax.lax.axis_size: the latter only exists
+        # in newer jax than the pinned 0.4.x
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -258,45 +270,15 @@ def _weights_from_stats(
 
 
 def _krum_scores_from_gram(gram: Array, f: int) -> Array:
-    K = gram.shape[0]
     n = jnp.diag(gram)
     d2 = jnp.maximum(n[:, None] + n[None, :] - 2.0 * gram, 0.0)
-    d2 = d2 + jnp.diag(jnp.full((K,), jnp.inf, jnp.float32))
-    n_closest = max(1, K - int(f) - 2)
-    neg_small, _ = jax.lax.top_k(-d2, n_closest)
-    return -neg_small.sum(axis=-1)
+    return agg_lib.krum_scores_from_sq_dists(d2, f)
 
 
 def _clustering_from_gram(gram: Array) -> Array:
     n = jnp.sqrt(jnp.maximum(jnp.diag(gram), 1e-24))
-    cosm = gram / (n[:, None] * n[None, :])
-    D0 = 1.0 - cosm
-    # reuse the Lance-Williams merge loop from core on a synthetic update
-    # matrix is not possible (it needs vectors); run it on the distance
-    # matrix directly (same code path, factored out here).
-    K = gram.shape[0]
-    if K <= 2:
-        return jnp.ones((K,), bool)
-    eye = jnp.eye(K, dtype=bool)
-
-    def merge_step(carry, _):
-        D, active, sizes, assign = carry
-        pair_ok = active[:, None] & active[None, :] & ~eye
-        Dm = jnp.where(pair_ok, D, jnp.inf)
-        flat = jnp.argmin(Dm)
-        i0, j0 = flat // K, flat % K
-        i, j = jnp.minimum(i0, j0), jnp.maximum(i0, j0)
-        ni, nj = sizes[i], sizes[j]
-        newrow = (ni * D[i] + nj * D[j]) / (ni + nj)
-        D = D.at[i, :].set(newrow).at[:, i].set(newrow)
-        active = active.at[j].set(False)
-        sizes = sizes.at[i].set(ni + nj).at[j].set(0.0)
-        assign = jnp.where(assign == j, i, assign)
-        return (D, active, sizes, assign), None
-
-    init = (D0, jnp.ones((K,), bool), jnp.ones((K,), jnp.float32), jnp.arange(K))
-    (_, _, sizes, assign), _ = jax.lax.scan(merge_step, init, None, length=K - 2)
-    return assign == jnp.argmax(sizes)
+    D0 = 1.0 - gram / (n[:, None] * n[None, :])
+    return agg_lib.clustering_select_from_dist(D0)
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +346,54 @@ def _stacked_stats(stacked: Any, cfg: RobustAggConfig) -> ChunkStats:
         gram = gram + jnp.tensordot(g, g, axes=(rest, rest))
     return ChunkStats(dist2_med=dist2, dot_med=dot_med, med2=med2, gram=gram,
                       sketch=jnp.zeros((0,), jnp.float32))
+
+
+def _concat_candidates(tree: Any, dtype=None) -> Array:
+    """Flatten a stacked candidate pytree to one (K, P) matrix (fused path)."""
+    leaves = jax.tree.leaves(tree)
+    K = leaves[0].shape[0]
+    parts = [
+        (l.astype(dtype) if dtype is not None else l).astype(jnp.float32).reshape(K, -1)
+        for l in leaves
+    ]
+    return jnp.concatenate(parts, axis=1)
+
+
+def _stacked_stats_fused(
+    stacked: Any, cfg: RobustAggConfig, prev: Optional[Any] = None,
+):
+    """One-pass statistics for the stacked layout via the robust_stats
+    Pallas kernel: a single read of the concatenated (K, P) candidates
+    yields the WFAgg-D/C metrics AND (with ``prev``) the exact WFAgg-T
+    round-over-round metrics; the (K, K) Gram comes from the blocked
+    pairwise kernel only when a Krum/Clustering-family rule needs it.
+
+    Returns (ChunkStats, RobustStats) — the latter carries the temporal
+    tail the caller feeds to wfagg_t_decide.
+    """
+    gd = jnp.dtype(cfg.gather_dtype) if cfg.gather_dtype else None
+    flat = _concat_candidates(stacked, gd)
+    pflat = _concat_candidates(prev) if prev is not None else None
+    stats = robust_stats(flat, prev=pflat, need_center=False)
+    w = cfg.wfagg
+    needs_gram = (
+        cfg.method in ("krum", "multi_krum", "clustering", "alt_wfagg")
+        or w.distance_filter == "multi_krum"
+        or w.similarity_filter == "clustering"
+    )
+    if needs_gram:
+        gram, _ = pairwise_gram(flat)
+    else:
+        # _weights_from_stats only reads the diagonal (norm2) in this case
+        gram = jnp.diag(stats.norm2)
+    chunk = ChunkStats(
+        dist2_med=stats.dist2,
+        dot_med=stats.dotmed,
+        med2=stats.mednorm2,
+        gram=gram,
+        sketch=jnp.zeros((0,), jnp.float32),
+    )
+    return chunk, stats
 
 
 def _stacked_temporal_metrics(stacked: Any, prev: Any) -> Tuple[Array, Array]:
@@ -466,14 +496,28 @@ def robust_allreduce_stacked(
         return out, state, {"weights": jnp.ones((K,), jnp.float32),
                             "n_accepted": jnp.asarray(K)}
 
-    stats = _stacked_stats(stacked, cfg)
+    fused = cfg.backend == "fused"
+    temporal = (cfg.method in ("wfagg", "alt_wfagg") and cfg.wfagg.use_temporal
+                and state is not None)
+    # The temporal metrics are computed on FULL-precision candidates in
+    # the reference path (gather_dtype only quantizes the D/C/Gram
+    # statistics), so the fused kernel may only fold them into its pass
+    # when no gather_dtype rounding is in effect — otherwise the masks
+    # would diverge between backends.
+    fuse_temporal = fused and temporal and cfg.gather_dtype is None
+    if fused:
+        stats, kstats = _stacked_stats_fused(
+            stacked, cfg, prev=state.prev if fuse_temporal else None)
+    else:
+        stats = _stacked_stats(stacked, cfg)
 
     new_state = state
     temporal_mask = None
-    if cfg.method in ("wfagg", "alt_wfagg") and cfg.wfagg.use_temporal \
-            and state is not None:
-        from repro.core.wfagg import wfagg_t_decide
-        s_all, b_all = _stacked_temporal_metrics(stacked, state.prev)
+    if temporal:
+        if fuse_temporal:
+            s_all, b_all = kstats.prev_dist2, kstats.cosine_to_prev()
+        else:
+            s_all, b_all = _stacked_temporal_metrics(stacked, state.prev)
         temporal_mask, hist_s, hist_b, count, t = wfagg_t_decide(
             state.hist_s, state.hist_b, state.count, state.t,
             s_all, b_all, cfg.wfagg)

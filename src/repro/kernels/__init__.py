@@ -13,8 +13,10 @@ statistics with every other per-candidate statistic the filters need:
 Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
 wrapper) and ref.py (pure-jnp oracle); validated with interpret=True.
 """
-from repro.kernels.robust_stats.ops import robust_stats
+from repro.kernels.common import default_interpret, resolve_interpret
+from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
 from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref
+from repro.kernels.pairwise_dist.ops import pairwise_gram
 from repro.kernels.pairwise_dist.ops import pairwise_sq_dists as pairwise_sq_dists_kernel
 from repro.kernels.pairwise_dist.ref import pairwise_dist_ref
 from repro.kernels.weighted_agg.ops import weighted_agg

@@ -1,0 +1,32 @@
+"""Shared kernel-launch policy.
+
+Every Pallas wrapper used to hardcode ``interpret=True`` (correct on CPU,
+but it silently ran the interpreter on real TPUs too).  The single policy
+lives here: compile for real when the default backend is a TPU, interpret
+everywhere else, and let callers still force either mode explicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when Pallas kernels should run in interpret mode (non-TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an ``interpret`` argument: None means 'pick per backend'."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def auto_block_d(D: int, interpret: bool) -> int:
+    """Pick a D block size: ~2 large blocks in interpret mode (the
+    interpreter carries whole output buffers through its grid scan, so
+    many small steps thrash), 1024-lane tiles for compiled TPU."""
+    if not interpret:
+        return 1024
+    half = -(-D // 2)
+    return max(128, -(-half // 128) * 128)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -80,7 +82,7 @@ def flash_attention_pallas(
     q: Array, k: Array, v: Array,
     *, scale: float, causal: bool = True, sk_valid: int | None = None,
     q_offset: int = 0, block_q: int = 128, block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """q (BH, Sq, hd), k/v (BH, Sk, hd); Sq % block_q == Sk % block_k == 0.
 
@@ -115,5 +117,5 @@ def flash_attention_pallas(
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

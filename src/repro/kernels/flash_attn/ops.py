@@ -6,6 +6,7 @@ Pads Sq/Sk to block multiples (padding is masked inside the kernel via
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,7 @@ def flash_attention(
     q: jax.Array, k: jax.Array, v: jax.Array,
     scale: float, causal: bool = True,
     block_q: int = 128, block_k: int = 128,
-    interpret: bool = True, use_kernel: bool = True,
+    interpret: Optional[bool] = None, use_kernel: bool = True,
 ) -> jax.Array:
     """q (B,H,Sq,hd), k/v (B,H,Sk,hd) -> (B,H,Sq,hd)."""
     B, H, Sq, hd = q.shape

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _pairwise_kernel(u_ref, gram_ref, norm2_ref):
     u = u_ref[...].astype(jnp.float32)
@@ -24,7 +26,8 @@ def _pairwise_kernel(u_ref, gram_ref, norm2_ref):
     norm2_ref[...] += jnp.sum(u * u, axis=1)[None, :]
 
 
-def pairwise_pallas(updates: jax.Array, *, block_d: int = 1024, interpret: bool = True):
+def pairwise_pallas(updates: jax.Array, *, block_d: int = 1024,
+                    interpret: bool | None = None):
     K, D = updates.shape
     assert D % block_d == 0
     grid = (D // block_d,)
@@ -41,5 +44,5 @@ def pairwise_pallas(updates: jax.Array, *, block_d: int = 1024, interpret: bool 
             pl.BlockSpec((1, K), lambda i: (0, 0)),
         ),
         out_shape=out_shapes,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(updates)

@@ -1,29 +1,55 @@
-"""Jitted wrapper: pairwise squared-distance matrix via the Pallas kernel."""
+"""Jitted wrappers: pairwise Gram / squared-distance matrix via the
+blocked Pallas kernel.  ``pairwise_gram`` exposes the kernel's raw
+(Gram, squared-norms) pair for consumers that need inner products
+(cosine distances, Krum's Gram expansion) — reconstructing the Gram
+from the distance matrix would round-trip two cancellation-prone
+conversions."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import auto_block_d, resolve_interpret
 from repro.kernels.pairwise_dist.kernel import pairwise_pallas
 from repro.kernels.pairwise_dist.ref import pairwise_dist_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret", "use_kernel"))
+def pairwise_gram(
+    updates: jax.Array,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+):
+    """((K, K) Gram matrix, (K,) squared norms) in one blocked pass."""
+    if not use_kernel:
+        u = updates.astype(jnp.float32)
+        gram = u @ u.T
+        return gram, jnp.sum(u * u, axis=-1)
+    K, D = updates.shape
+    interpret = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(D, interpret)
+    pad = (-D) % block_d
+    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    gram, norm2 = pairwise_pallas(u, block_d=block_d, interpret=interpret)
+    return gram, norm2[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret", "use_kernel"))
 def pairwise_sq_dists(
     updates: jax.Array,
-    block_d: int = 1024,
-    interpret: bool = True,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
     use_kernel: bool = True,
 ) -> jax.Array:
     if not use_kernel:
         return pairwise_dist_ref(updates)
-    K, D = updates.shape
-    pad = (-D) % block_d
-    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
-    gram, norm2 = pairwise_pallas(u, block_d=block_d, interpret=interpret)
-    n = norm2[0]
+    K = updates.shape[0]
+    gram, n = pairwise_gram(updates, block_d=block_d, interpret=interpret)
     d2 = n[:, None] + n[None, :] - 2.0 * gram
     # The Gram expansion cancels catastrophically on the diagonal; the
     # self-distance is exactly zero, so pin it.

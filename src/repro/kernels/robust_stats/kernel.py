@@ -10,8 +10,19 @@ partial statistics (distance-to-median, dot-with-median, norms) come out
 of the same VMEM-resident block, so the whole WFAgg filter bank costs ONE
 HBM read of the candidates.
 
-Grid: 1-D over D/T blocks.  Per-candidate statistics accumulate into a
-revisited (1, K) output block (init at program_id 0).
+Temporal extension: when the previous-round candidates ``prev (K, D)``
+are supplied, the same VMEM-resident block also accumulates the WFAgg-T
+metrics — s_t = ||u - prev||^2 plus the dot/norm terms of b_t — so the
+full WFAgg-D/C/T filter bank still costs one read of the candidates (plus
+the unavoidable one read of ``prev``).
+
+Grids:
+  single  1-D over D/T blocks, candidates (K, D)
+  batched 2-D over (node, D/T block), candidates (N, K, D) — all N
+          per-node gossip aggregations in ONE kernel launch.  The D axis
+          is the innermost grid dimension, so each node's revisited (K,)
+          accumulator blocks are initialized at its first D block and
+          complete before the grid moves to the next node.
 """
 from __future__ import annotations
 
@@ -20,6 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 
 Array = jax.Array
 
@@ -34,18 +47,31 @@ def sort_rows(x: Array) -> Array:
     return x
 
 
-def _robust_stats_kernel(
-    u_ref,          # (K, T) candidate block
-    med_ref,        # (1, T) out
-    trim_ref,       # (1, T) out
-    dist2_ref,      # (1, K) out, accumulated
-    dotmed_ref,     # (1, K) out, accumulated
-    norm2_ref,      # (1, K) out, accumulated
-    mednorm2_ref,   # (1, 1) out, accumulated
-    *,
-    n_trim: int,
-):
+def _robust_stats_kernel(*refs, n_trim: int, has_prev: bool,
+                         emit_center: bool, d_axis: int):
+    """Shared kernel body for the single (d_axis=0) and batched (d_axis=1)
+    launches.  Block shapes may carry a leading node axis of size 1; every
+    read/write goes through a reshape so one body serves both layouts.
+    ``emit_center=False`` drops the streaming (1, D) median/trimmed-mean
+    outputs — the WFAgg filter bank only consumes the O(K) accumulators,
+    so skipping those writes keeps the fused path at one read + no
+    d-sized writes."""
+    if has_prev:
+        u_ref, prev_ref = refs[0], refs[1]
+        outs = refs[2:]
+    else:
+        u_ref, prev_ref = refs[0], None
+        outs = refs[1:]
+    if emit_center:
+        med_ref, trim_ref = outs[:2]
+        acc_refs = outs[2:]
+    else:
+        med_ref = trim_ref = None
+        acc_refs = outs
+    dist2_ref, dotmed_ref, norm2_ref, mednorm2_ref = acc_refs[:4]
+
     u = u_ref[...].astype(jnp.float32)
+    u = u.reshape(u.shape[-2], u.shape[-1])            # (K, T)
     K = u.shape[0]
 
     srt = sort_rows(u)
@@ -53,12 +79,13 @@ def _robust_stats_kernel(
         med = srt[K // 2]
     else:
         med = 0.5 * (srt[K // 2 - 1] + srt[K // 2])
-    if n_trim > 0:
-        trim = jnp.mean(srt[n_trim : K - n_trim], axis=0)
-    else:
-        trim = jnp.mean(srt, axis=0)
-    med_ref[...] = med[None, :].astype(med_ref.dtype)
-    trim_ref[...] = trim[None, :].astype(trim_ref.dtype)
+    if emit_center:
+        if n_trim > 0:
+            trim = jnp.mean(srt[n_trim : K - n_trim], axis=0)
+        else:
+            trim = jnp.mean(srt, axis=0)
+        med_ref[...] = med.reshape(med_ref.shape).astype(med_ref.dtype)
+        trim_ref[...] = trim.reshape(trim_ref.shape).astype(trim_ref.dtype)
 
     diff = u - med[None, :]
     p_dist2 = jnp.sum(diff * diff, axis=1)          # (K,)
@@ -66,53 +93,128 @@ def _robust_stats_kernel(
     p_norm2 = jnp.sum(u * u, axis=1)                # (K,)
     p_med2 = jnp.sum(med * med)                     # ()
 
-    @pl.when(pl.program_id(0) == 0)
+    @pl.when(pl.program_id(d_axis) == 0)
     def _init():
-        dist2_ref[...] = jnp.zeros_like(dist2_ref)
-        dotmed_ref[...] = jnp.zeros_like(dotmed_ref)
-        norm2_ref[...] = jnp.zeros_like(norm2_ref)
-        mednorm2_ref[...] = jnp.zeros_like(mednorm2_ref)
+        for ref in acc_refs:
+            ref[...] = jnp.zeros_like(ref)
 
-    dist2_ref[...] += p_dist2[None, :]
-    dotmed_ref[...] += p_dot[None, :]
-    norm2_ref[...] += p_norm2[None, :]
-    mednorm2_ref[...] += p_med2[None, None]
+    dist2_ref[...] += p_dist2.reshape(dist2_ref.shape)
+    dotmed_ref[...] += p_dot.reshape(dotmed_ref.shape)
+    norm2_ref[...] += p_norm2.reshape(norm2_ref.shape)
+    mednorm2_ref[...] += p_med2.reshape(mednorm2_ref.shape)
+
+    if has_prev:
+        pdist2_ref, pdot_ref, pnorm2_ref = acc_refs[4:]
+        pv = prev_ref[...].astype(jnp.float32)
+        pv = pv.reshape(pv.shape[-2], pv.shape[-1])
+        dprev = u - pv
+        pdist2_ref[...] += jnp.sum(dprev * dprev, axis=1).reshape(pdist2_ref.shape)
+        pdot_ref[...] += jnp.sum(u * pv, axis=1).reshape(pdot_ref.shape)
+        pnorm2_ref[...] += jnp.sum(pv * pv, axis=1).reshape(pnorm2_ref.shape)
 
 
 def robust_stats_pallas(
     updates: Array,
+    prev: Array | None = None,
     *,
     n_trim: int,
     block_d: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    emit_center: bool = True,
 ):
-    """Launch the fused robust-stats kernel.  D must be a multiple of block_d."""
+    """Launch the fused robust-stats kernel.  D must be a multiple of block_d.
+
+    Returns ([med, trim,] dist2, dotmed, norm2, mednorm2[, prev_dist2,
+    prev_dot, prev_norm2]) — med/trim only with ``emit_center``, the
+    temporal tail only when ``prev`` is given.
+    """
     K, D = updates.shape
     assert D % block_d == 0, (D, block_d)
+    has_prev = prev is not None
     grid = (D // block_d,)
-    kernel = functools.partial(_robust_stats_kernel, n_trim=n_trim)
-    out_shapes = (
-        jax.ShapeDtypeStruct((1, D), jnp.float32),   # med
-        jax.ShapeDtypeStruct((1, D), jnp.float32),   # trim
+    kernel = functools.partial(
+        _robust_stats_kernel, n_trim=n_trim, has_prev=has_prev,
+        emit_center=emit_center, d_axis=0
+    )
+    d_spec = pl.BlockSpec((1, block_d), lambda i: (0, i))
+    k_spec = pl.BlockSpec((1, K), lambda i: (0, 0))
+    out_shapes, out_specs = [], []
+    if emit_center:
+        out_shapes += [jax.ShapeDtypeStruct((1, D), jnp.float32)] * 2  # med, trim
+        out_specs += [d_spec, d_spec]
+    out_shapes += [
         jax.ShapeDtypeStruct((1, K), jnp.float32),   # dist2
         jax.ShapeDtypeStruct((1, K), jnp.float32),   # dotmed
         jax.ShapeDtypeStruct((1, K), jnp.float32),   # norm2
         jax.ShapeDtypeStruct((1, 1), jnp.float32),   # mednorm2
-    )
+    ]
+    out_specs += [k_spec, k_spec, k_spec,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))]
     in_specs = [pl.BlockSpec((K, block_d), lambda i: (0, i))]
-    out_specs = (
-        pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        pl.BlockSpec((1, K), lambda i: (0, 0)),
-        pl.BlockSpec((1, K), lambda i: (0, 0)),
-        pl.BlockSpec((1, K), lambda i: (0, 0)),
-        pl.BlockSpec((1, 1), lambda i: (0, 0)),
-    )
+    args = [updates]
+    if has_prev:
+        assert prev.shape == updates.shape, (prev.shape, updates.shape)
+        in_specs.append(pl.BlockSpec((K, block_d), lambda i: (0, i)))
+        args.append(prev)
+        out_shapes += [jax.ShapeDtypeStruct((1, K), jnp.float32)] * 3
+        out_specs += [k_spec] * 3
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(updates)
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
+        interpret=resolve_interpret(interpret),
+    )(*args)
+
+
+def robust_stats_batch_pallas(
+    updates: Array,
+    prev: Array | None = None,
+    *,
+    n_trim: int,
+    block_d: int = 1024,
+    interpret: bool | None = None,
+    emit_center: bool = True,
+):
+    """Batched launch: one kernel over (N, K, D) computes every node's
+    statistics.  2-D grid (node, D block); same outputs as the single
+    launch with a leading N axis."""
+    N, K, D = updates.shape
+    assert D % block_d == 0, (D, block_d)
+    has_prev = prev is not None
+    grid = (N, D // block_d)
+    kernel = functools.partial(
+        _robust_stats_kernel, n_trim=n_trim, has_prev=has_prev,
+        emit_center=emit_center, d_axis=1
+    )
+    d_spec = pl.BlockSpec((1, 1, block_d), lambda n, i: (n, 0, i))
+    k_spec = pl.BlockSpec((1, 1, K), lambda n, i: (n, 0, 0))
+    out_shapes, out_specs = [], []
+    if emit_center:
+        out_shapes += [jax.ShapeDtypeStruct((N, 1, D), jnp.float32)] * 2
+        out_specs += [d_spec, d_spec]
+    out_shapes += [
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dist2
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dotmed
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # norm2
+        jax.ShapeDtypeStruct((N, 1, 1), jnp.float32),   # mednorm2
+    ]
+    out_specs += [k_spec, k_spec, k_spec,
+                  pl.BlockSpec((1, 1, 1), lambda n, i: (n, 0, 0))]
+    in_specs = [pl.BlockSpec((1, K, block_d), lambda n, i: (n, 0, i))]
+    args = [updates]
+    if has_prev:
+        assert prev.shape == updates.shape, (prev.shape, updates.shape)
+        in_specs.append(pl.BlockSpec((1, K, block_d), lambda n, i: (n, 0, i)))
+        args.append(prev)
+        out_shapes += [jax.ShapeDtypeStruct((N, 1, K), jnp.float32)] * 3
+        out_specs += [k_spec] * 3
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
+        interpret=resolve_interpret(interpret),
+    )(*args)

@@ -1,43 +1,143 @@
-"""Jitted public wrapper for the fused robust-stats kernel.
+"""Jitted public wrappers for the fused robust-stats kernel.
 
 Handles D padding to the block size (zero padding is exact: a zero column
-has median 0, contributing nothing to any accumulated statistic) and
-returns the same ``RobustStats`` namedtuple as the oracle in ref.py.
+has median 0, contributing nothing to any accumulated statistic — and
+this extends to the temporal statistics, since ``prev`` is padded with
+zeros too) and returns the same ``RobustStats`` namedtuple as the oracle
+in ref.py.
+
+``robust_stats`` operates on one (K, D) candidate matrix;
+``robust_stats_batch`` runs all N nodes of a gossip round through ONE
+kernel launch over the gathered (N, K, D) tensor (2-D grid), instead of
+a vmap of single-node calls — vmapping a pallas_call serializes into a
+per-node outer loop, while the batched grid streams every node's blocks
+through the same kernel instance.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.robust_stats.kernel import robust_stats_pallas
+from repro.kernels.common import auto_block_d, resolve_interpret
+from repro.kernels.robust_stats.kernel import (
+    robust_stats_batch_pallas,
+    robust_stats_pallas,
+)
 from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref, trim_count
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "block_d", "interpret", "use_kernel"))
+def _pad_d(x: jax.Array, block_d: int) -> jax.Array:
+    pad = (-x.shape[-1]) % block_d
+    cfgpad = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x.astype(jnp.float32), cfgpad)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta", "block_d", "interpret", "use_kernel", "need_center"))
 def robust_stats(
     updates: jax.Array,
+    prev: Optional[jax.Array] = None,
     beta: float = 0.1,
-    block_d: int = 1024,
-    interpret: bool = True,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
     use_kernel: bool = True,
+    need_center: bool = True,
 ) -> RobustStats:
-    """Fused median / trimmed-mean / WFAgg filter statistics over (K, D)."""
+    """Fused median / trimmed-mean / WFAgg filter statistics over (K, D).
+
+    With ``prev`` (the previous-round candidates), the same single pass
+    also emits the WFAgg-T temporal metrics (prev_dist2/prev_dot/
+    prev_norm2); without it those fields are None.  ``block_d=None``
+    picks a backend-appropriate tile (see auto_block_d).
+    ``need_center=False`` skips the streaming (D,)-sized median/trim
+    outputs (med/trim come back None) — the WFAgg filter bank consumes
+    only the O(K) accumulators, so its fused path writes nothing d-sized.
+    """
     if not use_kernel:
-        return robust_stats_ref(updates, beta)
+        return robust_stats_ref(updates, beta, prev=prev)
     K, D = updates.shape
     n_trim = trim_count(K, beta)
-    pad = (-D) % block_d
-    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
-    med, trim, dist2, dotmed, norm2, mednorm2 = robust_stats_pallas(
-        u, n_trim=n_trim, block_d=block_d, interpret=interpret
+    itp = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(D, itp)
+    u = _pad_d(updates, block_d)
+    p = _pad_d(prev, block_d) if prev is not None else None
+    outs = robust_stats_pallas(
+        u, p, n_trim=n_trim, block_d=block_d, interpret=itp,
+        emit_center=need_center,
     )
+    if need_center:
+        med, trim = outs[0][0, :D], outs[1][0, :D]
+        outs = outs[2:]
+    else:
+        med = trim = None
+    dist2, dotmed, norm2, mednorm2 = outs[:4]
+    tail = (None, None, None)
+    if prev is not None:
+        tail = tuple(o[0] for o in outs[4:])
     return RobustStats(
-        med=med[0, :D],
-        trim=trim[0, :D],
+        med=med,
+        trim=trim,
         dist2=dist2[0],
         dotmed=dotmed[0],
         norm2=norm2[0],
         mednorm2=mednorm2[0, 0],
+        prev_dist2=tail[0],
+        prev_dot=tail[1],
+        prev_norm2=tail[2],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta", "block_d", "interpret", "use_kernel", "need_center"))
+def robust_stats_batch(
+    updates: jax.Array,
+    prev: Optional[jax.Array] = None,
+    beta: float = 0.1,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    need_center: bool = True,
+) -> RobustStats:
+    """Batched fused statistics over (N, K, D): one kernel launch for all
+    N per-node aggregations.  Every ``RobustStats`` field gains a leading
+    N axis (``mednorm2`` becomes (N,))."""
+    if not use_kernel:
+        return jax.vmap(lambda u, p: robust_stats_ref(u, beta, prev=p))(
+            updates, prev
+        ) if prev is not None else jax.vmap(
+            lambda u: robust_stats_ref(u, beta))(updates)
+    N, K, D = updates.shape
+    n_trim = trim_count(K, beta)
+    itp = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(D, itp)
+    u = _pad_d(updates, block_d)
+    p = _pad_d(prev, block_d) if prev is not None else None
+    outs = robust_stats_batch_pallas(
+        u, p, n_trim=n_trim, block_d=block_d, interpret=itp,
+        emit_center=need_center,
+    )
+    if need_center:
+        med, trim = outs[0][:, 0, :D], outs[1][:, 0, :D]
+        outs = outs[2:]
+    else:
+        med = trim = None
+    dist2, dotmed, norm2, mednorm2 = outs[:4]
+    tail = (None, None, None)
+    if prev is not None:
+        tail = tuple(o[:, 0, :] for o in outs[4:])
+    return RobustStats(
+        med=med,
+        trim=trim,
+        dist2=dist2[:, 0, :],
+        dotmed=dotmed[:, 0, :],
+        norm2=norm2[:, 0, :],
+        mednorm2=mednorm2[:, 0, 0],
+        prev_dist2=tail[0],
+        prev_dot=tail[1],
+        prev_norm2=tail[2],
     )

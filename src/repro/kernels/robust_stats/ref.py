@@ -8,13 +8,18 @@ Given a candidate matrix ``updates (K, D)`` computes, in one logical pass:
   norm2     (K,)  squared L2 norm of each candidate
   mednorm2  ()    squared L2 norm of the median model
 
-These are exactly the sufficient statistics of WFAgg-D (Alg. 2) and
-WFAgg-C (Alg. 3) plus the Median / Trimmed-Mean baselines — one HBM read
-of the candidate block serves all of them.
+and, when the previous-round candidates ``prev (K, D)`` are supplied:
+  prev_dist2 (K,) squared L2 distance to the previous update  (WFAgg-T s_t)
+  prev_dot   (K,) inner product with the previous update
+  prev_norm2 (K,) squared L2 norm of the previous update
+
+These are exactly the sufficient statistics of WFAgg-D (Alg. 2), WFAgg-C
+(Alg. 3) and WFAgg-T (Alg. 4) plus the Median / Trimmed-Mean baselines —
+one HBM read of the candidate block serves all of them.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,18 +34,28 @@ class RobustStats(NamedTuple):
     dotmed: Array
     norm2: Array
     mednorm2: Array
+    # temporal tail — populated only when the kernel was given ``prev``
+    prev_dist2: Optional[Array] = None
+    prev_dot: Optional[Array] = None
+    prev_norm2: Optional[Array] = None
 
     def cosine_to_median(self) -> Array:
         """1 - cos(theta_j, theta_med): the WFAgg-C metric (clip-invariant)."""
         denom = jnp.sqrt(jnp.maximum(self.norm2 * self.mednorm2, 1e-24))
         return 1.0 - self.dotmed / denom
 
+    def cosine_to_prev(self) -> Array:
+        """1 - cos(theta_j^t, theta_j^{t-1}): the WFAgg-T b_t metric."""
+        denom = jnp.sqrt(jnp.maximum(self.norm2 * self.prev_norm2, 1e-24))
+        return 1.0 - self.prev_dot / denom
+
 
 def trim_count(K: int, beta: float) -> int:
     return int(beta * K)
 
 
-def robust_stats_ref(updates: Array, beta: float = 0.1) -> RobustStats:
+def robust_stats_ref(updates: Array, beta: float = 0.1,
+                     prev: Optional[Array] = None) -> RobustStats:
     K = updates.shape[0]
     srt = jnp.sort(updates, axis=0)
     if K % 2 == 1:
@@ -54,4 +69,11 @@ def robust_stats_ref(updates: Array, beta: float = 0.1) -> RobustStats:
     dotmed = updates @ med
     norm2 = jnp.sum(updates * updates, axis=-1)
     mednorm2 = jnp.sum(med * med)
-    return RobustStats(med, trim, dist2, dotmed, norm2, mednorm2)
+    prev_dist2 = prev_dot = prev_norm2 = None
+    if prev is not None:
+        dp = updates - prev
+        prev_dist2 = jnp.sum(dp * dp, axis=-1)
+        prev_dot = jnp.sum(updates * prev, axis=-1)
+        prev_norm2 = jnp.sum(prev * prev, axis=-1)
+    return RobustStats(med, trim, dist2, dotmed, norm2, mednorm2,
+                       prev_dist2, prev_dot, prev_norm2)

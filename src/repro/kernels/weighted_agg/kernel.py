@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _weighted_agg_kernel(w_ref, lcoef_ref, local_ref, u_ref, out_ref):
     u = u_ref[...].astype(jnp.float32)            # (K, T)
@@ -29,7 +31,7 @@ def weighted_agg_pallas(
     updates: jax.Array,   # (K, D)
     *,
     block_d: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     K, D = updates.shape
     assert D % block_d == 0
@@ -45,5 +47,5 @@ def weighted_agg_pallas(
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(wvec, lcoef, local, updates)

@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import auto_block_d, resolve_interpret
 from repro.kernels.weighted_agg.kernel import weighted_agg_pallas
 from repro.kernels.weighted_agg.ref import weighted_agg_ref
 
@@ -16,13 +18,16 @@ def weighted_agg(
     updates: jax.Array,
     weights: jax.Array,
     alpha: float = 0.8,
-    block_d: int = 1024,
-    interpret: bool = True,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
     use_kernel: bool = True,
 ) -> jax.Array:
     if not use_kernel:
         return weighted_agg_ref(local, updates, weights, alpha)
     K, D = updates.shape
+    interpret = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(D, interpret)
     wsum = weights.sum()
     w_norm = weights / jnp.maximum(wsum, 1e-12)
     eff_alpha = jnp.where(wsum > 0, alpha, 0.0)

@@ -229,7 +229,7 @@ def build_train_step(cfg: ArchConfig, tc: TrainConfig, mesh: Mesh) -> Callable:
                 a = a if a is not None else jnp.zeros((), jnp.float32)
                 return p, o, a, s, m
 
-            out = jax.shard_map(
+            out = shd.shard_map_compat(
                 wrapped,
                 mesh=mesh,
                 in_specs=(P(), P(), P(), P(), bspecs),
@@ -289,7 +289,7 @@ def build_train_step(cfg: ArchConfig, tc: TrainConfig, mesh: Mesh) -> Callable:
         def stacked_step_fn(state: TrainState, batch):
             has_agg = state.agg_state is not None
             bspecs = shd.batch_specs(batch, data_axes=axes, mesh=mesh)
-            grads_stacked, losses = jax.shard_map(
+            grads_stacked, losses = shd.shard_map_compat(
                 grad_worker,
                 mesh=mesh,
                 in_specs=(P(), P(), bspecs),

@@ -1,0 +1,98 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test-suite uses a small slice of the hypothesis API: ``@settings``,
+``@given`` and the ``integers``/``floats`` strategies.  This shim replays
+each property test over a fixed number of deterministically-seeded random
+samples — far weaker than real hypothesis (no shrinking, no database, no
+adaptive generation) but it keeps the property tests meaningful and the
+suite collectable everywhere.  ``tests/conftest.py`` installs it into
+``sys.modules`` only when the real package is missing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, allow_nan=True,
+           allow_infinity=True, **_) -> _Strategy:
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError(
+            "the hypothesis fallback shim only supports keyword strategies")
+
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                f(*args, **drawn, **kwargs)
+        # hide the strategy-driven parameters from pytest's fixture
+        # resolution (real hypothesis does the same)
+        sig = inspect.signature(f)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(f):
+        # cap the replay count: without shrinking, extra examples buy
+        # little coverage but cost jit retraces on shape-valued draws
+        f._shim_max_examples = min(int(max_examples), _DEFAULT_EXAMPLES)
+        return f
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as the ``hypothesis`` package in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

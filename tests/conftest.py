@@ -1,0 +1,22 @@
+"""Test-suite bootstrap.
+
+Installs the deterministic ``hypothesis`` fallback shim when the real
+package is absent (see _hypothesis_fallback.py), so the property tests
+collect and run everywhere, and registers the ``slow`` marker.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end tests (trainer loops)")

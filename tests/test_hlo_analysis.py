@@ -96,8 +96,9 @@ def test_collectives_inside_scan_multiplied(monkeypatch):
         acc, _ = jax.lax.scan(body, 0.0, x)
         return acc
 
-    sf = jax.shard_map(f, mesh=mesh, in_specs=(P(None, None),), out_specs=P(),
-                       check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+    sf = shard_map_compat(f, mesh=mesh, in_specs=(P(None, None),),
+                          out_specs=P(), check_vma=False)
     xs = jax.ShapeDtypeStruct((C, D), jnp.float32)
     compiled = jax.jit(sf).lower(xs).compile()
     c = ha.analyze(compiled.as_text(), n_devices=4)

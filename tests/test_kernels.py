@@ -33,8 +33,12 @@ def test_robust_stats_matches_oracle(K, D):
     got = robust_stats(u, beta=0.1, block_d=256)
     ref = robust_stats_ref(u, beta=0.1)
     for name in got._fields:
+        g = getattr(got, name)
+        if g is None:  # temporal tail absent without a prev input
+            assert getattr(ref, name) is None
+            continue
         np.testing.assert_allclose(
-            getattr(got, name), getattr(ref, name), rtol=3e-5, atol=3e-5, err_msg=name
+            g, getattr(ref, name), rtol=3e-5, atol=3e-5, err_msg=name
         )
 
 
@@ -55,6 +59,8 @@ def test_robust_stats_block_invariance(block_d):
     a = robust_stats(u, beta=0.1, block_d=block_d)
     b = robust_stats(u, beta=0.1, block_d=1024)
     for name in a._fields:
+        if getattr(a, name) is None:
+            continue
         np.testing.assert_allclose(getattr(a, name), getattr(b, name), rtol=2e-6, atol=2e-6)
 
 

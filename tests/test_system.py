@@ -249,8 +249,9 @@ def test_robust_allreduce_consensus_identical_output():
         out, _, info = robust_allreduce(x, "data", cfg, None)
         return out, info["weights"]
 
-    sf = jax.shard_map(fn, mesh=mesh, in_specs=(P("data"),),
-                       out_specs=(P(), P()), check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+    sf = shard_map_compat(fn, mesh=mesh, in_specs=(P("data"),),
+                          out_specs=(P(), P()), check_vma=False)
     x = jax.random.normal(jax.random.PRNGKey(0), (4 * d,))
     out, w = jax.jit(sf)(x)
     assert out.shape == (d,)
@@ -279,9 +280,10 @@ def test_stacked_layout_matches_flat_layout():
         out, _, info = robust_allreduce(flat, "data", cfg, None)
         return unravel(out), info["weights"]
 
-    sf = jax.shard_map(flat_fn, mesh=mesh, in_specs=(P("data"), P("data")),
-                       out_specs=(({"a": P(), "b": P()}), P()),
-                       check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+    sf = shard_map_compat(flat_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+                          out_specs=(({"a": P(), "b": P()}), P()),
+                          check_vma=False)
     (oa_f, w_f) = jax.jit(sf)(grads["a"], grads["b"])
 
     # stacked path is pure GSPMD — call it directly on the (K, ...) arrays
@@ -312,7 +314,9 @@ def test_stacked_attack_matches_distributed_semantics():
 
     out = apply_stacked_attack({"w": g}, malicious, "ipm_100",
                                jax.random.PRNGKey(1))["w"]
-    np.testing.assert_allclose(np.asarray(out[1]), -100.0 * mu, rtol=1e-5)
+    # rtol 2e-5: the jnp masked-sum mean and the numpy fancy-indexed mean
+    # accumulate in different orders; eps=100 amplifies the f32 noise
+    np.testing.assert_allclose(np.asarray(out[1]), -100.0 * mu, rtol=2e-5)
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(g[0]))
 
     out = apply_stacked_attack({"w": g}, malicious, "alie",
