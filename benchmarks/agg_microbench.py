@@ -81,13 +81,37 @@ def bench_rules(K: int, d: int) -> List[Dict]:
         us = _timeit(fn, local, updates, tstate) * 1e6
         rows.append(_row(f"wfagg[{backend}]", K, d, us, backend,
                          passes=wf.memory_passes(wcfg)))
+
+    # batched gossip round over an (N, d) model matrix: the gathered
+    # launch materializes the (N, Kb, d) tensor first, the indexed one
+    # DMAs neighbor blocks straight from the matrix (one pass less,
+    # K-fold less HBM) — the `passes` column counts the gather
+    N = 4
+    models = jax.random.normal(jax.random.PRNGKey(5), (N, d), jnp.float32)
+    Kb = min(K, N - 1)
+    nidx = jnp.asarray(
+        [[(n + o) % N for o in range(1, Kb + 1)] for n in range(N)], jnp.int32)
+    wcfg = wf.WFAggConfig(backend="fused", use_temporal=False)
+    for name, indexed, fn in (
+        ("wfagg_batch[gathered]", False,
+         jax.jit(lambda m: wf.wfagg_batch(m, m[nidx], None, wcfg)[0])),
+        ("wfagg_batch[indexed]", True,
+         jax.jit(lambda m: wf.wfagg_batch(m, m, None, wcfg,
+                                          neighbor_idx=nidx)[0])),
+    ):
+        us = _timeit(fn, models) * 1e6
+        rows.append(_row(name, Kb, d, us, "fused",
+                         passes=wf.memory_passes(wcfg, include_gather=True,
+                                                 indexed=indexed),
+                         read_factor=float(N)))
     return rows
 
 
 def bench_kernels(K: int, d: int) -> List[Dict]:
     from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
-    from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
-    from repro.kernels.weighted_agg.ops import weighted_agg
+    from repro.kernels.robust_stats.ops import (
+        robust_stats, robust_stats_batch, robust_stats_indexed)
+    from repro.kernels.weighted_agg.ops import weighted_agg, weighted_agg_indexed
 
     key = jax.random.PRNGKey(1)
     updates = jax.random.normal(key, (K, d), jnp.float32)
@@ -95,15 +119,32 @@ def bench_kernels(K: int, d: int) -> List[Dict]:
     batch = jnp.stack([updates] * 4)
     local = updates[0]
     weights = jnp.ones((K,), jnp.float32)
+    # gather-free rows: N=4 nodes exchanging over an (M, d) model matrix
+    # through a neighbor table — same aggregate work as the batch4 row,
+    # minus the (N, K, d) gossip tensor (indexed DMA instead of gather).
+    # M = K + 1 model rows so every slate is K DISTINCT non-self rows —
+    # with fewer rows the GBps column would credit re-reads of the same
+    # few vectors as distinct HBM traffic.
+    N, M = 4, K + 1
+    models = jax.random.normal(jax.random.PRNGKey(3), (M, d), jnp.float32)
+    nidx = jnp.asarray(
+        [[(n + o) % M for o in range(1, K + 1)] for n in range(N)], jnp.int32)
+    wbatch = jnp.ones((N, K), jnp.float32)
     rows = []
     for name, backend, factor, fn in (
         ("robust_stats[pallas]", "fused", 1.0, lambda: robust_stats(updates)),
         ("robust_stats+prev[pallas]", "fused", 2.0, lambda: robust_stats(updates, prev)),
         ("robust_stats_batch4[pallas]", "fused", 4.0, lambda: robust_stats_batch(batch)),
+        ("robust_stats_idx4[pallas]", "fused", 4.0,
+         lambda: robust_stats_indexed(models, nidx)),
+        ("robust_stats_idx4+prev[pallas]", "fused", 8.0,
+         lambda: robust_stats_indexed(models, nidx, prev=models)),
         ("robust_stats[jnp-ref]", "reference", 1.0, lambda: robust_stats(updates, use_kernel=False)),
         ("pairwise[pallas]", "fused", 1.0, lambda: pairwise_sq_dists(updates)),
         ("pairwise[jnp-ref]", "reference", 1.0, lambda: pairwise_sq_dists(updates, use_kernel=False)),
         ("weighted_agg[pallas]", "fused", 1.0, lambda: weighted_agg(local, updates, weights)),
+        ("weighted_agg_idx4[pallas]", "fused", 4.0,
+         lambda: weighted_agg_indexed(models[:N], models, nidx, wbatch)),
         ("weighted_agg[jnp-ref]", "reference", 1.0, lambda: weighted_agg(local, updates, weights, use_kernel=False)),
     ):
         us = _timeit(fn, reps=3) * 1e6

@@ -4,6 +4,12 @@ accuracy trace of the paper's Figure 7.
 
     PYTHONPATH=src python examples/dfl_paper_experiment.py \
         --aggregator wfagg --attack noise --rounds 10 --model lenet
+
+Beyond-paper switches: ``--topology erdos_renyi`` runs the gather-free
+irregular-degree path (padded neighbor tables), and ``--backend
+fused|reference`` selects the WFAgg execution backend.  Irregular
+topologies require the fused backend (the reference pipeline uses
+static per-filter keep counts), which the CLI enforces up front.
 """
 import argparse
 
@@ -27,21 +33,36 @@ def main() -> None:
     ap.add_argument("--degree", type=int, default=8)
     ap.add_argument("--malicious", type=int, default=2)
     ap.add_argument("--placement", default="close", choices=("close", "spaced"))
+    ap.add_argument("--topology", default="ring",
+                    choices=("ring", "complete", "erdos_renyi"),
+                    help="gossip graph; erdos_renyi exercises the "
+                         "irregular-degree (padded-table) path")
+    ap.add_argument("--backend", default="fused",
+                    choices=("fused", "reference"),
+                    help="WFAgg execution backend (fused = gather-free "
+                         "indexed kernels; reference = multi-pass jnp)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.topology == "erdos_renyi" and args.backend == "reference":
+        ap.error("--topology erdos_renyi needs --backend fused: the "
+                 "reference pipeline cannot honor irregular (padded) "
+                 "neighbor tables")
 
+    kind = "complete" if args.centralized else args.topology
     topo = make_topology(n_nodes=args.nodes, degree=args.degree,
-                         n_malicious=args.malicious,
-                         kind="complete" if args.centralized else "ring",
-                         placement=args.placement)
+                         n_malicious=args.malicious, kind=kind,
+                         seed=args.seed, placement=args.placement)
     data = SyntheticImages(seed=args.seed)
     cfg = DFLConfig(aggregator=args.aggregator, attack=args.attack,
                     model=args.model, centralized=args.centralized,
-                    seed=args.seed)
+                    seed=args.seed, wfagg_backend=args.backend)
     out = run_experiment(cfg, topo, data, rounds=args.rounds, eval_every=1)
 
+    degs = topo.degrees
     print(f"aggregator={args.aggregator} attack={args.attack} "
-          f"{'CFL' if args.centralized else 'DFL'} rounds={args.rounds}")
+          f"{'CFL' if args.centralized else 'DFL'} rounds={args.rounds} "
+          f"topology={kind} backend={args.backend} "
+          f"degrees={int(degs.min())}..{int(degs.max())}")
     mal = set(map(int, topo.malicious.nonzero()[0]))
     print(f"malicious nodes: {sorted(mal)}")
     for e in out["trace"]:

@@ -18,6 +18,7 @@ from repro.core.attacks import (
     ATTACK_NAMES,
     AttackConfig,
     alie_attack,
+    apply_matrix_attack,
     apply_model_attack,
     flip_labels,
     ipm_attack,
@@ -25,7 +26,12 @@ from repro.core.attacks import (
     sign_flip_attack,
 )
 from repro.core.metrics import consensus_distance, cross_entropy, micro_accuracy, r_squared
-from repro.core.topology import Topology, make_topology, paper_topology
+from repro.core.topology import (
+    Topology,
+    make_topology,
+    padded_neighbor_table,
+    paper_topology,
+)
 # NOTE: the bare `wfagg` function is intentionally NOT re-exported here --
 # it would shadow the `repro.core.wfagg` submodule attribute.  Use
 # `from repro.core.wfagg import wfagg` directly.

@@ -43,6 +43,18 @@ def smallest_k_mask(scores: Array, k: int) -> Array:
     return jnp.zeros((K,), dtype=bool).at[idx].set(True)
 
 
+def smallest_k_mask_dyn(scores: Array, k: Array) -> Array:
+    """``smallest_k_mask`` with a TRACED keep count ``k`` (clamped to
+    [0, K]).  Same tie-breaking (by index, via stable argsort) so the
+    masks agree bit-for-bit with the static variant when k is concrete —
+    the irregular-topology path uses per-node valid-degree-dependent
+    counts that cannot be Python ints."""
+    K = scores.shape[0]
+    order = jnp.argsort(scores)
+    rank = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return rank < jnp.clip(k, 0, K)
+
+
 def masked_mean(updates: Array, mask: Array) -> Array:
     w = mask.astype(updates.dtype)
     denom = jnp.maximum(w.sum(), 1.0)
@@ -106,6 +118,20 @@ def krum_scores_from_sq_dists(d2: Array, f: int) -> Array:
     return -neg_small.sum(axis=-1)
 
 
+def krum_scores_from_sq_dists_dyn(d2: Array, f: int, n_valid: Array) -> Array:
+    """Krum scores over a (K, K) squared-distance matrix whose invalid
+    rows/columns carry +inf, scoring each candidate by its
+    ``max(1, n_valid - f - 2)`` closest VALID peers (``n_valid`` traced).
+    Invalid candidates score +inf.  Matches ``krum_scores_from_sq_dists``
+    when every candidate is valid."""
+    K = d2.shape[0]
+    d2 = d2 + jnp.diag(jnp.full((K,), jnp.inf, dtype=d2.dtype))
+    srt = jnp.sort(d2, axis=1)
+    n_closest = jnp.maximum(n_valid - int(f) - 2, 1)
+    take = jnp.arange(K)[None, :] < n_closest
+    return jnp.sum(jnp.where(take, srt, 0.0), axis=1)
+
+
 def krum_scores(updates: Array, f: int) -> Array:
     """Krum score per candidate: sum of sq-dists to its K-f-2 closest peers."""
     return krum_scores_from_sq_dists(pairwise_sq_dists(updates), f)
@@ -160,6 +186,50 @@ def clustering_select_from_dist(D0: Array) -> Array:
     (_, _, sizes, assign), _ = jax.lax.scan(merge_step, init, None, length=K - 2)
     big = jnp.argmax(sizes)  # slot of the larger of the two surviving clusters
     return assign == big
+
+
+def clustering_select_from_dist_dyn(D0: Array, valid: Array) -> Array:
+    """``clustering_select_from_dist`` restricted to the valid candidates
+    of a padded (irregular-degree) slate: invalid slots start inactive
+    with size 0 and +inf distances, and only ``n_valid - 2`` merges are
+    applied (later scan steps are gated no-ops), so the recurrence runs
+    exactly on the valid submatrix.  Bit-identical to the static variant
+    when every candidate is valid."""
+    K = D0.shape[0]
+    valid = valid.astype(bool)
+    if K <= 2:
+        return valid
+    eye = jnp.eye(K, dtype=bool)
+    vpair = valid[:, None] & valid[None, :]
+    D0 = jnp.where(vpair, D0, jnp.inf)
+    n_merge = valid.sum() - 2
+
+    def merge_step(carry, s):
+        D, active, sizes, assign = carry
+        gate = s < n_merge
+        pair_ok = active[:, None] & active[None, :] & ~eye
+        Dm = jnp.where(pair_ok, D, jnp.inf)
+        flat = jnp.argmin(Dm)
+        i0, j0 = flat // K, flat % K
+        i = jnp.minimum(i0, j0)
+        j = jnp.maximum(i0, j0)
+        ni, nj = sizes[i], sizes[j]
+        newrow = (ni * D[i] + nj * D[j]) / jnp.maximum(ni + nj, 1.0)
+        nD = D.at[i, :].set(newrow).at[:, i].set(newrow)
+        nactive = active.at[j].set(False)
+        nsizes = sizes.at[i].set(ni + nj).at[j].set(0.0)
+        nassign = jnp.where(assign == j, i, assign)
+        carry = (jnp.where(gate, nD, D), jnp.where(gate, nactive, active),
+                 jnp.where(gate, nsizes, sizes), jnp.where(gate, nassign, assign))
+        return carry, None
+
+    init = (D0, valid, valid.astype(D0.dtype), jnp.arange(K))
+    (_, _, sizes, assign), _ = jax.lax.scan(
+        merge_step, init, jnp.arange(K - 2))
+    big = jnp.argmax(sizes)
+    # <= 2 valid candidates: nothing to cluster, accept them all (the
+    # static variant's K <= 2 early-out)
+    return jnp.where(n_merge + 2 <= 2, valid, (assign == big) & valid)
 
 
 def clustering_select(updates: Array) -> Array:

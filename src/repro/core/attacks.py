@@ -90,4 +90,53 @@ def apply_model_attack(
     raise ValueError(f"unknown attack {name!r}")
 
 
+def _ipm_eps(name: str, cfg: AttackConfig) -> float:
+    if name == "ipm_0.5":
+        return 0.5
+    if name == "ipm_100":
+        return 100.0
+    return cfg.ipm_eps
+
+
+def apply_matrix_attack(
+    name: str,
+    models: Array,             # (K, ...) candidate stack (leading K axis)
+    malicious: Array,          # (K,) bool
+    key: Array,
+    cfg: Optional[AttackConfig] = None,
+) -> Array:
+    """Replace the malicious rows of a stacked candidate array.
+
+    The single jit-safe implementation of the vectorized model-poisoning
+    math: benign-cohort statistics come from masked sums (``malicious``
+    may be traced, so no boolean indexing), and only Byzantine rows are
+    replaced.  Both the mode-A engine (flat (N, d) model matrix) and the
+    mode-B stacked layout (per-leaf (K, *shape)) route through here —
+    previously each carried its own copy of this math.
+    """
+    cfg = cfg or AttackConfig(name=name)
+    if name in ("none", "label_flip"):
+        return models
+    K = models.shape[0]
+    mal = malicious.reshape((K,) + (1,) * (models.ndim - 1))
+    if name == "noise":
+        attacked = noise_attack(models, key, cfg.noise_mu, cfg.noise_sigma)
+        return jnp.where(mal, attacked.astype(models.dtype), models)
+    if name == "sign_flip":
+        return jnp.where(mal, -models, models)
+    benign_w = (~malicious).reshape(mal.shape).astype(jnp.float32)
+    n_benign = jnp.maximum(K - malicious.sum(), 1).astype(jnp.float32)
+    mf = models.astype(jnp.float32)
+    mu = jnp.sum(mf * benign_w, axis=0, keepdims=True) / n_benign
+    if name.startswith("ipm"):
+        attacked = -_ipm_eps(name, cfg) * mu
+    elif name == "alie":
+        var = jnp.sum(benign_w * (mf - mu) ** 2, axis=0, keepdims=True) / n_benign
+        attacked = mu - cfg.alie_zmax * jnp.sqrt(var)
+    else:
+        raise ValueError(f"unknown attack {name!r}")
+    return jnp.where(mal, jnp.broadcast_to(attacked, mf.shape).astype(models.dtype),
+                     models)
+
+
 ATTACK_NAMES = ("none", "noise", "sign_flip", "label_flip", "ipm_0.5", "ipm_100", "alie")

@@ -3,6 +3,13 @@
 The paper models the network as an undirected graph; experiments use a
 20-node 8-regular ring lattice (Watts-Strogatz with rewiring p=0), 10%
 malicious nodes placed so every node has at most 25% malicious neighbors.
+
+Irregular graphs (erdos_renyi, or any hand-built adjacency) are
+represented with a PADDED neighbor table: ``neighbor_indices`` is
+(N, K_max) where padded slots repeat the node's own index (a safe row to
+DMA — the self model is always finite) and ``neighbor_valid`` marks the
+real edges.  The gather-free aggregation kernels and the WFAgg mask
+logic honor the valid mask, so per-node degrees may differ freely.
 """
 from __future__ import annotations
 
@@ -15,12 +22,29 @@ import numpy as np
 class Topology:
     n_nodes: int
     adjacency: np.ndarray          # (N, N) bool, symmetric, no self-loops
-    neighbor_indices: np.ndarray   # (N, K) int32 - fixed degree K
+    neighbor_indices: np.ndarray   # (N, K) int32 - padded to the max degree
     malicious: np.ndarray          # (N,) bool
+    neighbor_valid: np.ndarray = None   # (N, K) bool - False on padded slots
+
+    def __post_init__(self):
+        if self.neighbor_valid is None:
+            object.__setattr__(
+                self, "neighbor_valid",
+                np.ones(self.neighbor_indices.shape, dtype=bool))
 
     @property
     def degree(self) -> int:
+        """Neighbor-table width K (= max degree for irregular graphs)."""
         return int(self.neighbor_indices.shape[1])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """Per-node true degree (valid neighbor count)."""
+        return self.neighbor_valid.sum(axis=1)
+
+    @property
+    def is_regular(self) -> bool:
+        return bool(self.neighbor_valid.all())
 
     def malicious_neighbor_count(self) -> np.ndarray:
         """Per node, how many of its neighbors are malicious."""
@@ -97,6 +121,27 @@ def neighbor_table(adj: np.ndarray) -> np.ndarray:
     return np.stack([np.nonzero(adj[i])[0] for i in range(adj.shape[0])]).astype(np.int32)
 
 
+def padded_neighbor_table(adj: np.ndarray):
+    """(table (N, K_max) int32, valid (N, K_max) bool) for ANY graph.
+
+    Padded slots carry the node's OWN index: the indexed aggregation
+    kernels DMA that row like any other candidate (always a finite,
+    in-bounds address) and the valid mask excludes it from every
+    median/mask/score computation downstream.
+    """
+    n = adj.shape[0]
+    degs = adj.sum(axis=1).astype(np.int64)
+    k_max = max(1, int(degs.max()))
+    table = np.empty((n, k_max), dtype=np.int32)
+    valid = np.zeros((n, k_max), dtype=bool)
+    for i in range(n):
+        nbrs = np.nonzero(adj[i])[0]
+        table[i, : len(nbrs)] = nbrs
+        table[i, len(nbrs):] = i
+        valid[i, : len(nbrs)] = True
+    return table, valid
+
+
 def make_topology(
     n_nodes: int = 20,
     degree: int = 8,
@@ -112,14 +157,13 @@ def make_topology(
         degree = n_nodes - 1
     elif kind == "erdos_renyi":
         adj = erdos_renyi(n_nodes, degree / (n_nodes - 1), seed=seed)
-        # not regular in general; fall back to ring for the table
-        raise NotImplementedError("erdos_renyi topology needs irregular-degree support")
     else:
         raise ValueError(f"unknown topology kind {kind!r}")
     mal = (close_malicious(n_nodes, n_malicious, degree)
            if placement == "close" else spaced_malicious(n_nodes, n_malicious))
-    table = neighbor_table(adj)
-    return Topology(n_nodes=n_nodes, adjacency=adj, neighbor_indices=table, malicious=mal)
+    table, valid = padded_neighbor_table(adj)
+    return Topology(n_nodes=n_nodes, adjacency=adj, neighbor_indices=table,
+                    malicious=mal, neighbor_valid=valid)
 
 
 def paper_topology() -> Topology:

@@ -35,9 +35,10 @@ import jax.numpy as jnp
 
 from repro.core import aggregators as agg
 from repro.kernels.pairwise_dist.ops import pairwise_gram
-from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
+from repro.kernels.robust_stats.ops import (
+    robust_stats, robust_stats_batch, robust_stats_indexed)
 from repro.kernels.robust_stats.ref import RobustStats
-from repro.kernels.weighted_agg.ops import weighted_agg
+from repro.kernels.weighted_agg.ops import weighted_agg, weighted_agg_indexed
 
 Array = jax.Array
 _EPS = 1e-12
@@ -294,6 +295,41 @@ def _needs_gram(cfg: WFAggConfig) -> bool:
     return cfg.distance_filter == "multi_krum" or cfg.similarity_filter == "clustering"
 
 
+def _fused_distance_mask_valid(stats: RobustStats, gram: Optional[Array],
+                               valid: Array, cfg: WFAggConfig) -> Array:
+    """Valid-aware distance mask for one node of a padded (irregular)
+    slate: keep counts scale with the node's TRUE degree v (traced), and
+    padded slots score +inf so they can never be selected.  Bit-identical
+    to ``_fused_distance_mask`` when every slot is valid."""
+    K = stats.dist2.shape[-1]
+    v = valid.sum()
+    if cfg.distance_filter == "wfagg_d":
+        scores = jnp.where(valid, stats.dist2, jnp.inf)
+        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
+    if cfg.distance_filter == "multi_krum":
+        d2 = _sq_dists_from_gram(gram, stats.norm2)
+        vpair = valid[:, None] & valid[None, :]
+        scores = agg.krum_scores_from_sq_dists_dyn(
+            jnp.where(vpair, d2, jnp.inf), cfg.f, v)
+        m = cfg.multi_krum_m or max(1, K // 4)
+        return agg.smallest_k_mask_dyn(
+            jnp.where(valid, scores, jnp.inf), jnp.minimum(m, v))
+    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
+
+
+def _fused_similarity_mask_valid(stats: RobustStats, gram: Optional[Array],
+                                 valid: Array, cfg: WFAggConfig) -> Array:
+    """Valid-aware similarity mask (see ``_fused_distance_mask_valid``)."""
+    v = valid.sum()
+    if cfg.similarity_filter == "wfagg_c":
+        scores = jnp.where(valid, stats.cosine_to_median(), jnp.inf)
+        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
+    if cfg.similarity_filter == "clustering":
+        return agg.clustering_select_from_dist_dyn(
+            _cosine_dist_from_gram(gram, stats.norm2), valid)
+    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+
+
 def _wfagg_fused(
     local: Array,
     updates: Array,
@@ -368,6 +404,8 @@ def wfagg_batch(
     updates: Array,
     state: Optional[TemporalState],
     cfg: WFAggConfig,
+    neighbor_idx: Optional[Array] = None,
+    valid: Optional[Array] = None,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Batched full WFAgg over all N receiving nodes of a gossip round.
 
@@ -378,7 +416,21 @@ def wfagg_batch(
     batched combine; only the O(K)/O(K^2) mask logic is vmapped.  The
     reference backend vmaps the plain-jnp pipeline (same semantics,
     multi-pass traffic).
+
+    Gather-free path: with ``neighbor_idx (N, K)``, ``updates`` is the
+    (M, d) MODEL MATRIX instead of a gathered tensor — the fused kernels
+    DMA each neighbor's d-blocks straight from it, so the (N, K, d)
+    gossip tensor never exists in HBM.  ``valid (N, K)`` marks the real
+    edges of padded irregular topologies (None = regular); the temporal
+    ``prev`` state may be per-edge (N, K, d) or a previous-round model
+    matrix (M, d) read through the same index table (in which case the
+    new state stays a matrix and the round is (N, K, d)-free end to end).
     """
+    if neighbor_idx is not None:
+        return _wfagg_batch_indexed(local, updates, state, cfg,
+                                    neighbor_idx, valid)
+    if valid is not None:
+        raise ValueError("valid requires neighbor_idx (padded indexed path)")
     if cfg.backend == "reference":
         if state is not None:
             return jax.vmap(lambda l, u, s: wfagg(l, u, s, cfg))(
@@ -428,7 +480,87 @@ def wfagg_batch(
     return out, new_state, info
 
 
-def memory_passes(cfg: WFAggConfig) -> int:
+def _wfagg_batch_indexed(
+    local: Array,
+    models: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+    neighbor_idx: Array,
+    valid: Optional[Array],
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Gather-free batched WFAgg: neighbor-indexed stats + combine."""
+    N, K = neighbor_idx.shape
+    valid_b = jnp.ones((N, K), dtype=bool) if valid is None else valid.astype(bool)
+    temporal = cfg.use_temporal and state is not None
+    matrix_prev = temporal and state.prev.ndim == 2
+
+    if cfg.backend == "reference":
+        if valid is not None:
+            raise NotImplementedError(
+                "backend='reference' runs the static-count per-node pipeline "
+                "and cannot honor a padded valid mask; irregular topologies "
+                "need backend='fused'")
+        gathered = models[neighbor_idx]
+        if state is not None:
+            edge_state = (state._replace(prev=state.prev[neighbor_idx])
+                          if matrix_prev else state)
+            out, new_state, info = jax.vmap(
+                lambda l, u, s: wfagg(l, u, s, cfg))(local, gathered, edge_state)
+            if matrix_prev:
+                new_state = new_state._replace(prev=models)
+            return out, new_state, info
+        out, _, info = jax.vmap(lambda l, u: wfagg(l, u, None, cfg))(
+            local, gathered)
+        return out, None, info
+    if cfg.backend != "fused":
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+
+    prev = state.prev if temporal else None
+    # the Alt-WFAgg (K, K) Gram rides along in the SAME kernel pass,
+    # accumulated from the resident candidate tile — no extra read
+    stats = robust_stats_indexed(models, neighbor_idx, valid, prev=prev,
+                                 need_gram=_needs_gram(cfg))
+    gram = stats.gram
+    stats = stats._replace(gram=None)  # keep the vmapped mask fns uniform
+    if gram is not None:
+        mask_d = jax.vmap(lambda s, g, v: _fused_distance_mask_valid(s, g, v, cfg))(
+            stats, gram, valid_b)
+        mask_c = jax.vmap(lambda s, g, v: _fused_similarity_mask_valid(s, g, v, cfg))(
+            stats, gram, valid_b)
+    else:
+        mask_d = jax.vmap(lambda s, v: _fused_distance_mask_valid(s, None, v, cfg))(
+            stats, valid_b)
+        mask_c = jax.vmap(lambda s, v: _fused_similarity_mask_valid(s, None, v, cfg))(
+            stats, valid_b)
+    if temporal:
+        mask_t, hist_s, hist_b, count, t = jax.vmap(
+            lambda hs, hb, c, tt, s, b: wfagg_t_decide(hs, hb, c, tt, s, b, cfg)
+        )(state.hist_s, state.hist_b, state.count, state.t,
+          stats.prev_dist2, stats.cosine_to_prev())
+        mask_t = mask_t & valid_b
+        new_state = TemporalState(
+            prev=models if matrix_prev else models[neighbor_idx],
+            hist_s=hist_s, hist_b=hist_b, count=count, t=t)
+    else:
+        mask_t = jnp.zeros((N, K), dtype=bool)
+        new_state = state
+    weights = wfagg_scores(mask_d, mask_c, mask_t, cfg) * valid_b
+    # gather-free WFAgg-E combine: neighbor rows DMA'd by the same table
+    out = weighted_agg_indexed(local, models, neighbor_idx, weights,
+                               alpha=cfg.alpha)
+    info = {
+        "mask_d": mask_d,
+        "mask_c": mask_c,
+        "mask_t": mask_t,
+        "valid": valid_b,
+        "weights": weights,
+        "n_accepted": (weights > 0).sum(axis=-1),
+    }
+    return out, new_state, info
+
+
+def memory_passes(cfg: WFAggConfig, include_gather: bool = False,
+                  indexed: bool = False) -> int:
     """Number of (K, d)-sized HBM passes per full-WFAgg aggregation.
 
     reference: each filter re-reads the candidates — distance filter
@@ -438,13 +570,24 @@ def memory_passes(cfg: WFAggConfig) -> int:
     fused: ONE robust_stats read covers D/C/T statistics, plus the
     combine (+ 1 Gram pass only when an Alt-WFAgg filter needs K x K
     distances).  See kernels/README.md for the accounting.
+
+    ``include_gather`` also counts the gossip-exchange materialization a
+    DFL round pays BEFORE aggregating: building the (N, K, d) gathered
+    tensor costs one more candidate-sized pass (write ~= read) — unless
+    ``indexed`` (the gather-free neighbor-indexed path), which DMAs
+    neighbor blocks straight from the (N, d) model matrix and never
+    materializes the tensor.  The indexed path also folds the Alt-WFAgg
+    (K, K) Gram into the stats pass (accumulated off the resident tile),
+    dropping the separate Gram pass as well.
     """
     t = 1 if cfg.use_temporal else 0
+    gather = 1 if (include_gather and not indexed) else 0
     if cfg.backend == "fused":
-        return 2 + (1 if _needs_gram(cfg) else 0)
+        gram = 1 if (_needs_gram(cfg) and not indexed) else 0
+        return 2 + gram + gather
     d_passes = 1 if cfg.distance_filter == "multi_krum" else 2
     c_passes = 1 if cfg.similarity_filter == "clustering" else 3
-    return d_passes + c_passes + t + 1
+    return d_passes + c_passes + t + 1 + gather
 
 
 def alt_wfagg_config(**kw) -> WFAggConfig:

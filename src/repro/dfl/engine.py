@@ -45,6 +45,9 @@ class DFLConfig:
     paper: PaperDFLConfig = PaperDFLConfig()
     batches_per_round: int = 4
     seed: int = 0
+    # Model-poisoning attack hyper-parameters (ALIE z_max, noise mu/sigma,
+    # IPM eps) — routed through core.attacks.apply_matrix_attack.
+    attack_params: atk.AttackConfig = atk.AttackConfig()
     # WFAgg execution backend: "fused" runs the whole gossip round's
     # aggregations through one robust_stats kernel launch (see
     # core.wfagg.wfagg_batch); "reference" keeps the multi-pass jnp path.
@@ -88,7 +91,20 @@ def init_dfl_state(cfg: DFLConfig, topo: Topology) -> DFLState:
     d = flat_one.shape[0]
     K = topo.n_nodes if cfg.centralized else topo.degree
     temporal = None
-    if cfg.aggregator in ("wfagg", "alt_wfagg", "wfagg_t"):
+    if cfg.aggregator in ("wfagg", "alt_wfagg") and not cfg.centralized:
+        # Gather-free gossip rounds keep the temporal ``prev`` as the
+        # previous round's (N, d) MODEL MATRIX instead of a per-edge
+        # (N, K, d) tensor — prev[idx[n, k]] is exactly edge (n, k)'s
+        # last received model, the indexed kernel reads it through the
+        # same neighbor table, and the K-fold state buffer disappears.
+        temporal = wf.TemporalState(
+            prev=jnp.zeros((N, d), jnp.float32),
+            hist_s=jnp.zeros((N, cfg.paper.window, K), jnp.float32),
+            hist_b=jnp.zeros((N, cfg.paper.window, K), jnp.float32),
+            count=jnp.zeros((N,), jnp.int32),
+            t=jnp.zeros((N,), jnp.int32),
+        )
+    elif cfg.aggregator in ("wfagg", "alt_wfagg", "wfagg_t"):
         temporal = jax.vmap(lambda _: wf.init_temporal_state(K, d, cfg.paper.window))(
             jnp.arange(1 if cfg.centralized else N)
         )
@@ -140,29 +156,15 @@ def _local_train(cfg: DFLConfig, data: SyntheticImages, topo: Topology,
 # ---------------------------------------------------------------------------
 
 def _apply_attacks(cfg: DFLConfig, topo: Topology, flat_models: Array, rnd: Array) -> Array:
-    """Replace Byzantine rows of (N, d) with attacked models."""
-    if cfg.attack in ("none", "label_flip"):
-        return flat_models
-    malicious = jnp.asarray(topo.malicious)
-    benign_w = (~malicious).astype(flat_models.dtype)[:, None]
-    n_benign = jnp.maximum((~malicious).sum(), 1)
-    mu = (flat_models * benign_w).sum(0) / n_benign
-    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), rnd)
+    """Replace Byzantine rows of (N, d) with attacked models.
 
-    if cfg.attack == "noise":
-        noise = 0.1 + 0.1 * jax.random.normal(key, flat_models.shape, flat_models.dtype)
-        attacked = flat_models + noise
-    elif cfg.attack == "sign_flip":
-        attacked = -flat_models
-    elif cfg.attack == "alie":
-        var = ((flat_models - mu) ** 2 * benign_w).sum(0) / n_benign
-        attacked = jnp.broadcast_to(mu - 0.5 * jnp.sqrt(var), flat_models.shape)
-    elif cfg.attack in ("ipm_0.5", "ipm_100"):
-        eps = 0.5 if cfg.attack == "ipm_0.5" else 100.0
-        attacked = jnp.broadcast_to(-eps * mu, flat_models.shape)
-    else:
-        raise ValueError(cfg.attack)
-    return jnp.where(malicious[:, None], attacked, flat_models)
+    Routed through ``core.attacks.apply_matrix_attack`` (the shared
+    masked-stack implementation) so AttackConfig hyper-parameters — ALIE
+    z_max, noise mu/sigma, IPM eps — are honored instead of hardcoded."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), rnd)
+    return atk.apply_matrix_attack(
+        cfg.attack, flat_models, jnp.asarray(topo.malicious), key,
+        cfg.attack_params)
 
 
 # ---------------------------------------------------------------------------
@@ -227,7 +229,17 @@ def _aggregate_one(cfg: DFLConfig, local: Array, updates: Array,
 # ---------------------------------------------------------------------------
 
 def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Callable:
-    neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K)
+    neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K) padded
+    # None on regular graphs: the indexed kernels then skip the mask and
+    # the reference backend stays available for parity runs.
+    neighbor_valid = (None if topo.is_regular
+                      else jnp.asarray(topo.neighbor_valid))
+    if neighbor_valid is not None and not cfg.centralized \
+            and cfg.aggregator not in ("wfagg", "alt_wfagg"):
+        raise NotImplementedError(
+            f"aggregator {cfg.aggregator!r} assumes a regular neighbor "
+            "table; irregular (padded) topologies are supported by the "
+            "wfagg/alt_wfagg gather-free path")
     _, fwd = _model_fns(cfg)
 
     def round_fn(state: DFLState) -> DFLState:
@@ -251,19 +263,24 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Cal
                 jax.tree.map(lambda x: x[None], new_t0) if new_t0 is not None else None
             )
         else:
-            gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
             if cfg.aggregator in ("wfagg", "alt_wfagg"):
-                # all N per-node aggregations in one fused kernel launch
-                # (or one vmapped jnp pipeline under backend="reference")
+                # gather-free gossip: all N per-node aggregations in one
+                # neighbor-indexed kernel launch — the (N, K, d) gossip
+                # tensor never exists, the kernels DMA each neighbor's
+                # d-blocks straight from the (N, d) model matrix (the
+                # reference backend gathers, for parity runs)
                 wcfg = _wfagg_full_config(cfg, topo.degree)
                 new_flat, new_temporal, _ = wf.wfagg_batch(
-                    flat, gathered, state.temporal, wcfg)
+                    flat, flat, state.temporal, wcfg,
+                    neighbor_idx=neighbor_idx, valid=neighbor_valid)
             elif state.temporal is not None:
+                gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
                 new_flat, new_temporal = jax.vmap(
                     lambda loc, upd, ts: _aggregate_one(
                         cfg, loc, upd, ts, wfagg_backend="reference")
                 )(flat, gathered, state.temporal)
             else:
+                gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
                 new_flat, _ = jax.vmap(
                     lambda loc, upd: _aggregate_one(cfg, loc, upd, None)
                 )(flat, gathered)
@@ -297,7 +314,10 @@ def evaluate(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     flat, _ = _ravel_nodes(state.node_params)
     r2 = float(met.r_squared(jnp.asarray(np.asarray(flat)[benign])))
     by_mn = {}
-    for m in (0, 1, 2):
+    # bucket by every malicious-neighbor count the topology realizes
+    # (dense placements can put >= 3 malicious nodes next to a benign
+    # one; hardcoded buckets would silently drop those nodes)
+    for m in range(max(2, int(mal_nb.max(initial=0))) + 1):
         sel = benign & (mal_nb == m)
         by_mn[m] = float(accs[sel].mean()) if sel.any() else float("nan")
     return {

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
+from repro.core import attacks as atk
 from repro.core.wfagg import (
     TemporalState, WFAggConfig, wfagg_scores, wfagg_t_decide, wfagg_t_select)
 from repro.kernels.pairwise_dist.ops import pairwise_gram
@@ -228,7 +229,10 @@ def _weights_from_stats(
     def mask_d() -> Array:
         if cfg.method == "alt_wfagg" or w.distance_filter == "multi_krum":
             scores = _krum_scores_from_gram(stats.gram, w.f)
-            m = cfg.multi_krum_m or max(1, K // 4)
+            # WFAggConfig.multi_krum_m is the filter's own knob (what the
+            # mode-A path reads in core.wfagg._distance_mask); the
+            # RobustAggConfig field is the standalone-method fallback.
+            m = w.multi_krum_m or cfg.multi_krum_m or max(1, K // 4)
             return agg_lib.smallest_k_mask(scores, m)
         return agg_lib.smallest_k_mask(stats.dist2_med, K - w.f - 1)
 
@@ -424,38 +428,20 @@ def apply_stacked_attack(
     noise_sigma: float = 0.1,
     alie_zmax: float = 0.5,
 ) -> Any:
-    """Vectorized model-poisoning attacks on stacked candidates (mirrors
-    ``dfl.engine._apply_attacks``; pure GSPMD — demo/integration use)."""
+    """Vectorized model-poisoning attacks on stacked candidates (pure
+    GSPMD — demo/integration use).  Thin per-leaf wrapper over
+    ``core.attacks.apply_matrix_attack`` — the one implementation of the
+    masked-stack attack math, shared with ``dfl.engine``."""
     if attack in ("none", "label_flip"):
         return stacked
+    acfg = atk.AttackConfig(name=attack, noise_mu=noise_mu,
+                            noise_sigma=noise_sigma, alie_zmax=alie_zmax)
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
-    K = leaves[0].shape[0]
-    n_benign = jnp.maximum(K - malicious.sum(), 1).astype(jnp.float32)
-
-    out = []
-    for i, leaf in enumerate(leaves):
-        mal = malicious.reshape((K,) + (1,) * (leaf.ndim - 1))
-        lk = jax.random.fold_in(key, i)
-        if attack == "noise":
-            noisy = leaf + noise_mu + noise_sigma * jax.random.normal(
-                lk, leaf.shape, leaf.dtype)
-            out.append(jnp.where(mal, noisy, leaf))
-            continue
-        if attack == "sign_flip":
-            out.append(jnp.where(mal, -leaf, leaf))
-            continue
-        benign_w = (~malicious).reshape(mal.shape).astype(leaf.dtype)
-        mu = jnp.sum(leaf * benign_w, axis=0, keepdims=True) / n_benign
-        if attack.startswith("ipm"):
-            eps = 100.0 if attack == "ipm_100" else 0.5
-            out.append(jnp.where(mal, (-eps * mu).astype(leaf.dtype), leaf))
-            continue
-        if attack == "alie":
-            var = jnp.sum(benign_w * (leaf - mu) ** 2, axis=0, keepdims=True) / n_benign
-            malv = mu - alie_zmax * jnp.sqrt(var)
-            out.append(jnp.where(mal, malv.astype(leaf.dtype), leaf))
-            continue
-        raise ValueError(f"unknown attack {attack!r}")
+    out = [
+        atk.apply_matrix_attack(attack, leaf, malicious,
+                                jax.random.fold_in(key, i), acfg)
+        for i, leaf in enumerate(leaves)
+    ]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

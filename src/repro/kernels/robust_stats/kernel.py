@@ -31,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import resolve_interpret
 
@@ -166,6 +167,170 @@ def robust_stats_pallas(
         out_shape=tuple(out_shapes),
         interpret=resolve_interpret(interpret),
     )(*args)
+
+
+def _robust_stats_indexed_kernel(*refs, K: int, has_prev: bool,
+                                 need_gram: bool):
+    """Gather-free body: grid (node, D block, neighbor slot).  Each step
+    DMAs ONE neighbor row block — models[neighbor_idx[n, k], d-block],
+    resolved by the scalar-prefetch index map — into a VMEM scratch row;
+    at the last slot the full (K, T) candidate tile is resident and the
+    stats flush exactly like the gathered kernel, so the (N, K, d) gossip
+    tensor never exists in HBM.
+
+    The median honors the per-node valid mask: invalid (padded) rows sort
+    to +inf and the median picks the dynamic middle of the v valid rows
+    via one-hot row selection.  Per-candidate statistics are computed on
+    the RAW rows (padded slots hold the node's own finite model), so they
+    stay finite and the caller's mask logic drops them by ``valid``.
+    """
+    idx_ref = refs[0]  # scalar-prefetch neighbor table (unused in body)
+    del idx_ref
+    valid_ref = refs[1]
+    if has_prev:
+        u_ref, prev_ref = refs[2], refs[3]
+        outs = refs[4:]
+    else:
+        u_ref, prev_ref = refs[2], None
+        outs = refs[3:]
+    n_scratch = 2 if has_prev else 1
+    scratch_u = outs[-n_scratch]
+    scratch_p = outs[-1] if has_prev else None
+    acc_refs = outs[:-n_scratch]
+    dist2_ref, dotmed_ref, norm2_ref, mednorm2_ref = acc_refs[:4]
+    gram_ref = acc_refs[4] if need_gram else None
+
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+    # program_id must be read OUTSIDE pl.when bodies: the 0.4.x interpret
+    # path cannot lower the primitive from inside the cond branch.
+    is_last = k == K - 1
+    is_first_d = i == 0
+
+    scratch_u[k, :] = u_ref[...].reshape(scratch_u.shape[1:]).astype(jnp.float32)
+    if has_prev:
+        scratch_p[k, :] = prev_ref[...].reshape(scratch_p.shape[1:]).astype(jnp.float32)
+
+    @pl.when(is_last)
+    def _flush():
+        u = scratch_u[...]                                   # (K, T)
+        vcol = valid_ref[...].reshape(K, 1) > 0.0            # (K, 1)
+        srt = sort_rows(jnp.where(vcol, u, jnp.inf))
+        v = jnp.sum(vcol.astype(jnp.int32))
+        lo, hi = (v - 1) // 2, v // 2                        # dynamic middles
+        kar = jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)
+        med = 0.5 * (jnp.sum(jnp.where(kar == lo, srt, 0.0), axis=0)
+                     + jnp.sum(jnp.where(kar == hi, srt, 0.0), axis=0))
+
+        diff = u - med[None, :]
+        p_dist2 = jnp.sum(diff * diff, axis=1)
+        p_dot = jnp.sum(u * med[None, :], axis=1)
+        p_norm2 = jnp.sum(u * u, axis=1)
+        p_med2 = jnp.sum(med * med)
+
+        @pl.when(is_first_d)
+        def _init():
+            for ref in acc_refs:
+                ref[...] = jnp.zeros_like(ref)
+
+        dist2_ref[...] += p_dist2.reshape(dist2_ref.shape)
+        dotmed_ref[...] += p_dot.reshape(dotmed_ref.shape)
+        norm2_ref[...] += p_norm2.reshape(norm2_ref.shape)
+        mednorm2_ref[...] += p_med2.reshape(mednorm2_ref.shape)
+
+        if need_gram:
+            # the (K, K) candidate Gram comes free off the resident tile
+            # (MXU matmul) — no extra pass for the Alt-WFAgg filters, and
+            # nothing quadratic in the TOTAL node count M
+            g = jnp.dot(u, u.T, preferred_element_type=jnp.float32)
+            gram_ref[...] += g.reshape(gram_ref.shape)
+
+        if has_prev:
+            pdist2_ref, pdot_ref, pnorm2_ref = acc_refs[5 if need_gram else 4:]
+            pv = scratch_p[...]
+            dprev = u - pv
+            pdist2_ref[...] += jnp.sum(dprev * dprev, axis=1).reshape(pdist2_ref.shape)
+            pdot_ref[...] += jnp.sum(u * pv, axis=1).reshape(pdot_ref.shape)
+            pnorm2_ref[...] += jnp.sum(pv * pv, axis=1).reshape(pnorm2_ref.shape)
+
+
+def robust_stats_indexed_pallas(
+    models: Array,        # (M, D) model matrix (row per node)
+    neighbor_idx: Array,  # (N, K) int32 rows into ``models``
+    valid: Array,         # (N, K) float32, 1.0 on real edges
+    prev: Array | None = None,   # (N, K, D) per-edge, or (M, D) matrix
+    *,
+    block_d: int = 1024,
+    interpret: bool | None = None,
+    need_gram: bool = False,
+):
+    """Gather-free robust-stats launch over a 3-D (node, D block, slot)
+    grid via ``PrefetchScalarGridSpec``: the neighbor table rides in SMEM
+    and the models input's index map reads it, so each grid step streams
+    one neighbor row block straight from the (M, D) matrix.  ``prev`` may
+    be per-edge (N, K, D) or a previous-round model matrix (M, D) read
+    through the same index table.  ``need_gram`` also accumulates each
+    node's (K, K) candidate Gram off the same resident tile (Alt-WFAgg).
+    Returns (dist2, dotmed, norm2, mednorm2[, gram][, prev_dist2,
+    prev_dot, prev_norm2]) shaped like the batched launch ((N, 1, K) /
+    (N, 1, 1) / (N, K, K)).
+    """
+    M, D = models.shape
+    N, K = neighbor_idx.shape
+    assert D % block_d == 0, (D, block_d)
+    has_prev = prev is not None
+    prev_is_matrix = has_prev and prev.ndim == 2
+    grid = (N, D // block_d, K)
+    kernel = functools.partial(
+        _robust_stats_indexed_kernel, K=K, has_prev=has_prev,
+        need_gram=need_gram,
+    )
+    k_spec = pl.BlockSpec((1, 1, K), lambda n, i, k, ir: (n, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, K), lambda n, i, k, ir: (n, 0)),          # valid
+        pl.BlockSpec((1, block_d), lambda n, i, k, ir: (ir[n, k], i)),  # models
+    ]
+    args = [valid.astype(jnp.float32), models]
+    if has_prev:
+        if prev_is_matrix:
+            assert prev.shape == models.shape, (prev.shape, models.shape)
+            in_specs.append(
+                pl.BlockSpec((1, block_d), lambda n, i, k, ir: (ir[n, k], i)))
+        else:
+            assert prev.shape == (N, K, D), (prev.shape, (N, K, D))
+            in_specs.append(
+                pl.BlockSpec((1, 1, block_d), lambda n, i, k, ir: (n, k, i)))
+        args.append(prev)
+    out_shapes = [
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dist2
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dotmed
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # norm2
+        jax.ShapeDtypeStruct((N, 1, 1), jnp.float32),   # mednorm2
+    ]
+    out_specs = [k_spec, k_spec, k_spec,
+                 pl.BlockSpec((1, 1, 1), lambda n, i, k, ir: (n, 0, 0))]
+    if need_gram:
+        out_shapes.append(jax.ShapeDtypeStruct((N, K, K), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, K, K), lambda n, i, k, ir: (n, 0, 0)))
+    if has_prev:
+        out_shapes += [jax.ShapeDtypeStruct((N, 1, K), jnp.float32)] * 3
+        out_specs += [k_spec] * 3
+    scratch_shapes = [pltpu.VMEM((K, block_d), jnp.float32)]
+    if has_prev:
+        scratch_shapes.append(pltpu.VMEM((K, block_d), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shapes),
+        interpret=resolve_interpret(interpret),
+    )(neighbor_idx.astype(jnp.int32), *args)
 
 
 def robust_stats_batch_pallas(

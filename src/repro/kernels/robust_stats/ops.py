@@ -24,9 +24,15 @@ import jax.numpy as jnp
 from repro.kernels.common import auto_block_d, resolve_interpret
 from repro.kernels.robust_stats.kernel import (
     robust_stats_batch_pallas,
+    robust_stats_indexed_pallas,
     robust_stats_pallas,
 )
-from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref, trim_count
+from repro.kernels.robust_stats.ref import (
+    RobustStats,
+    robust_stats_indexed_ref,
+    robust_stats_ref,
+    trim_count,
+)
 
 
 def _pad_d(x: jax.Array, block_d: int) -> jax.Array:
@@ -88,6 +94,70 @@ def robust_stats(
         prev_dist2=tail[0],
         prev_dot=tail[1],
         prev_norm2=tail[2],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_d", "interpret", "use_kernel", "need_gram"))
+def robust_stats_indexed(
+    models: jax.Array,
+    neighbor_idx: jax.Array,
+    valid: Optional[jax.Array] = None,
+    prev: Optional[jax.Array] = None,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    need_gram: bool = False,
+) -> RobustStats:
+    """Gather-free batched statistics: ``models (M, d)`` + ``neighbor_idx
+    (N, K)`` replace the gathered (N, K, d) tensor — the kernel DMAs each
+    neighbor's d-block straight from the model matrix (scalar-prefetch
+    index map), so the K-fold gossip tensor never exists in HBM.
+
+    ``valid (N, K)`` marks real edges on irregular (padded) topologies:
+    the in-kernel median spans only valid rows; per-candidate stats of
+    padded slots are finite garbage the caller masks out.  ``prev`` may
+    be per-edge (N, K, d) or a previous-round model matrix (M, d) read
+    through the same index table.  Output layout matches
+    ``robust_stats_batch`` (leading N axis; med/trim are None — the
+    filter bank never reads a d-sized center).  ``need_gram`` also emits
+    the per-node (K, K) candidate Gram, accumulated from the SAME
+    resident tile — no extra pass, and nothing quadratic in the total
+    node count M (the Alt-WFAgg filters consume it).
+    """
+    if not use_kernel:
+        return robust_stats_indexed_ref(models, neighbor_idx, valid, prev,
+                                        need_gram=need_gram)
+    N, K = neighbor_idx.shape
+    itp = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(models.shape[-1], itp)
+    m = _pad_d(models, block_d)
+    p = _pad_d(prev, block_d) if prev is not None else None
+    v = (jnp.ones((N, K), jnp.float32) if valid is None
+         else valid.astype(jnp.float32))
+    outs = robust_stats_indexed_pallas(
+        m, neighbor_idx, v, p, block_d=block_d, interpret=itp,
+        need_gram=need_gram)
+    dist2, dotmed, norm2, mednorm2 = outs[:4]
+    rest = outs[4:]
+    gram = None
+    if need_gram:
+        gram, rest = rest[0], rest[1:]
+    tail = (None, None, None)
+    if prev is not None:
+        tail = tuple(o[:, 0, :] for o in rest)
+    return RobustStats(
+        med=None,
+        trim=None,
+        dist2=dist2[:, 0, :],
+        dotmed=dotmed[:, 0, :],
+        norm2=norm2[:, 0, :],
+        mednorm2=mednorm2[:, 0, 0],
+        prev_dist2=tail[0],
+        prev_dot=tail[1],
+        prev_norm2=tail[2],
+        gram=gram,
     )
 
 

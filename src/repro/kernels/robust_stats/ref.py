@@ -38,6 +38,10 @@ class RobustStats(NamedTuple):
     prev_dist2: Optional[Array] = None
     prev_dot: Optional[Array] = None
     prev_norm2: Optional[Array] = None
+    # (K, K) candidate Gram — populated only on the indexed path with
+    # ``need_gram`` (accumulated from the same VMEM-resident tile, so the
+    # Alt-WFAgg filters cost no extra candidate pass)
+    gram: Optional[Array] = None
 
     def cosine_to_median(self) -> Array:
         """1 - cos(theta_j, theta_med): the WFAgg-C metric (clip-invariant)."""
@@ -52,6 +56,49 @@ class RobustStats(NamedTuple):
 
 def trim_count(K: int, beta: float) -> int:
     return int(beta * K)
+
+
+def robust_stats_indexed_ref(
+    models: Array,            # (M, D) model matrix
+    neighbor_idx: Array,      # (N, K) rows into models (padded w/ self)
+    valid: Optional[Array] = None,   # (N, K) bool; None = all valid
+    prev: Optional[Array] = None,    # (N, K, D) per-edge or (M, D) matrix
+    need_gram: bool = False,
+) -> RobustStats:
+    """Oracle for the gather-free kernel (the oracle MAY gather).
+
+    The median is taken over the valid rows only (invalid rows sort to
+    +inf; the middle element indices come from the per-node valid count).
+    Per-candidate statistics are computed on the raw padded rows — the
+    caller masks them with ``valid`` — so every output stays finite.
+    ``med``/``trim`` are None: the indexed entry serves the WFAgg filter
+    bank, which never reads a d-sized center.
+    """
+    u = models[neighbor_idx].astype(jnp.float32)     # (N, K, D)
+    N, K, _ = u.shape
+    if valid is None:
+        valid = jnp.ones((N, K), dtype=bool)
+    vmask = valid.astype(bool)
+    srt = jnp.sort(jnp.where(vmask[..., None], u, jnp.inf), axis=1)
+    v = vmask.sum(axis=1)
+    lo, hi = (v - 1) // 2, v // 2
+    take = lambda j: jnp.take_along_axis(srt, j[:, None, None], axis=1)[:, 0, :]
+    med = 0.5 * (take(lo) + take(hi))                # (N, D)
+    diff = u - med[:, None, :]
+    dist2 = jnp.sum(diff * diff, axis=-1)
+    dotmed = jnp.einsum("nkd,nd->nk", u, med)
+    norm2 = jnp.sum(u * u, axis=-1)
+    mednorm2 = jnp.sum(med * med, axis=-1)
+    prev_dist2 = prev_dot = prev_norm2 = None
+    if prev is not None:
+        pe = (prev[neighbor_idx] if prev.ndim == 2 else prev).astype(jnp.float32)
+        dp = u - pe
+        prev_dist2 = jnp.sum(dp * dp, axis=-1)
+        prev_dot = jnp.sum(u * pe, axis=-1)
+        prev_norm2 = jnp.sum(pe * pe, axis=-1)
+    gram = jnp.einsum("nkd,njd->nkj", u, u) if need_gram else None
+    return RobustStats(None, None, dist2, dotmed, norm2, mednorm2,
+                       prev_dist2, prev_dot, prev_norm2, gram)
 
 
 def robust_stats_ref(updates: Array, beta: float = 0.1,

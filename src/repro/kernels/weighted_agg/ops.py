@@ -1,4 +1,5 @@
-"""Jitted wrapper for the fused WFAgg-E combine kernel."""
+"""Jitted wrappers for the fused WFAgg-E combine kernel (single-node and
+the gather-free batched/indexed variant)."""
 from __future__ import annotations
 
 import functools
@@ -8,7 +9,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import auto_block_d, resolve_interpret
-from repro.kernels.weighted_agg.kernel import weighted_agg_pallas
+from repro.kernels.weighted_agg.kernel import (
+    weighted_agg_indexed_pallas,
+    weighted_agg_pallas,
+)
 from repro.kernels.weighted_agg.ref import weighted_agg_ref
 
 
@@ -43,3 +47,44 @@ def weighted_agg(
         interpret=interpret,
     )
     return out[0, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_d", "interpret", "use_kernel"))
+def weighted_agg_indexed(
+    local: jax.Array,          # (N, d)
+    models: jax.Array,         # (M, d) model matrix
+    neighbor_idx: jax.Array,   # (N, K) rows into models
+    weights: jax.Array,        # (N, K) trust weights (0 on invalid slots)
+    alpha: float = 0.8,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Gather-free batched WFAgg-E combine: out_n = (1 - a_n) local_n +
+    a_n * sum_k w'_nk models[idx[n, k]], one kernel launch for all N
+    nodes, with the neighbor rows DMA'd straight from the (M, d) model
+    matrix.  Nodes whose weights sum to zero keep their local model."""
+    wsum = weights.sum(axis=-1)
+    w_norm = weights / jnp.maximum(wsum, 1e-12)[:, None]
+    eff_alpha = jnp.where(wsum > 0, alpha, 0.0)
+    if not use_kernel:
+        gathered = models[neighbor_idx].astype(jnp.float32)
+        neighbor = jnp.einsum("nk,nkd->nd", w_norm, gathered)
+        return (1.0 - eff_alpha)[:, None] * local + eff_alpha[:, None] * neighbor
+    N, d = local.shape
+    interpret = resolve_interpret(interpret)
+    if block_d is None:
+        block_d = auto_block_d(d, interpret)
+    pad = (-d) % block_d
+    m = jnp.pad(models.astype(jnp.float32), ((0, 0), (0, pad)))
+    loc = jnp.pad(local.astype(jnp.float32), ((0, 0), (0, pad)))
+    out = weighted_agg_indexed_pallas(
+        (eff_alpha[:, None] * w_norm).astype(jnp.float32),
+        (1.0 - eff_alpha)[:, None].astype(jnp.float32),
+        loc,
+        m,
+        neighbor_idx,
+        block_d=block_d,
+        interpret=interpret,
+    )
+    return out[:, :d]

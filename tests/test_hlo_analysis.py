@@ -106,6 +106,34 @@ def test_collectives_inside_scan_multiplied(monkeypatch):
     assert c.wire_bytes == pytest.approx(C * per_gather_wire, rel=0.3)
 
 
+def test_indexed_wfagg_round_is_gossip_tensor_free():
+    """The gather-free (fused, neighbor-indexed) DFL round must not
+    allocate ANY (N, K, d)-shaped f32 buffer — the K-fold gossip tensor,
+    its padded variants AND the per-edge temporal state are all gone.
+    The reference backend still materializes them (sanity check that the
+    pattern actually catches the gather)."""
+    import re
+
+    from repro.core.topology import paper_topology
+    from repro.data.synthetic import SyntheticImages
+    from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
+
+    topo = paper_topology()
+    data = SyntheticImages()
+    N, K = topo.n_nodes, topo.degree
+    pat = re.compile(rf"f32\[{N},{K},\d+\]")
+    hits = {}
+    for backend in ("fused", "reference"):
+        cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp",
+                        wfagg_backend=backend)
+        state = init_dfl_state(cfg, topo)
+        fn = build_round_fn(cfg, topo, data)
+        hlo = fn.lower(state).compile().as_text()
+        hits[backend] = sorted(set(pat.findall(hlo)))
+    assert hits["fused"] == [], hits["fused"]
+    assert hits["reference"], "reference round should materialize the gather"
+
+
 def test_dynamic_update_slice_counts_update_only():
     cap, D = 65536, 512
 
