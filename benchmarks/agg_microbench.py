@@ -107,6 +107,57 @@ def bench_rules(K: int, d: int) -> List[Dict]:
     return rows
 
 
+def bench_dynamic(K: int, d: int, rounds: int = 4) -> List[Dict]:
+    """Schedule-swap cost: a jitted lax.scan of ``rounds`` gather-free
+    WFAgg gossip aggregations, once with a STATIC schedule (the same
+    (N, K) neighbor table every round) and once with a DYNAMIC one (a
+    different table + valid mask per round).  The delta is what a
+    round-varying topology actually costs through the indexed path —
+    the kernels take the table as a traced input, so it should be the
+    price of an (N, K) index upload, not a recompile or a regather.
+    us_per_call is normalized PER ROUND."""
+    import numpy as np
+
+    N = 8
+    models = jax.random.normal(jax.random.PRNGKey(7), (N, d), jnp.float32)
+    Kb = min(K, N - 1)
+    wcfg = wf.WFAggConfig(backend="fused", use_temporal=False)
+    rng = np.random.default_rng(0)
+    idx = np.zeros((rounds, N, Kb), np.int32)
+    val = np.zeros((rounds, N, Kb), bool)
+    for r in range(rounds):
+        for n in range(N):
+            v = int(rng.integers(max(1, Kb - 2), Kb + 1))
+            nb = rng.choice([i for i in range(N) if i != n], size=v,
+                            replace=False)
+            idx[r, n, :v] = nb
+            idx[r, n, v:] = n
+            val[r, n, :v] = True
+    dyn_sched = (jnp.asarray(idx), jnp.asarray(val))
+    static_sched = (jnp.broadcast_to(dyn_sched[0][0], dyn_sched[0].shape),
+                    jnp.broadcast_to(dyn_sched[1][0], dyn_sched[1].shape))
+
+    @jax.jit
+    def run(m, sched_idx, sched_val):
+        def body(m, xs):
+            i, v = xs
+            out, _, _ = wf.wfagg_batch(m, m, None, wcfg,
+                                       neighbor_idx=i, valid=v)
+            return out, ()
+        m, _ = jax.lax.scan(body, m, (sched_idx, sched_val))
+        return m
+
+    rows = []
+    for name, sched in (("wfagg_round[sched-static]", static_sched),
+                        ("wfagg_round[sched-dynamic]", dyn_sched)):
+        us = _timeit(run, models, *sched, reps=3) * 1e6 / rounds
+        rows.append(_row(name, Kb, d, us, "fused",
+                         passes=wf.memory_passes(wcfg, include_gather=True,
+                                                 indexed=True),
+                         read_factor=float(N)))
+    return rows
+
+
 def bench_kernels(K: int, d: int) -> List[Dict]:
     from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
     from repro.kernels.robust_stats.ops import (
@@ -187,6 +238,7 @@ def main(argv=None) -> List[Dict]:
         rows += bench_rules(K, d)
         if args.kernels:
             rows += bench_kernels(K, min(d, 200_000))
+            rows += bench_dynamic(K, min(d, 200_000))
     for r in rows:
         passes = f" passes={r['passes']}" if "passes" in r else ""
         print(f"{r['rule']:28s} K={r['K']:3d} d={r['d']:8d} "

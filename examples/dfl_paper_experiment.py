@@ -6,10 +6,15 @@ accuracy trace of the paper's Figure 7.
         --aggregator wfagg --attack noise --rounds 10 --model lenet
 
 Beyond-paper switches: ``--topology erdos_renyi`` runs the gather-free
-irregular-degree path (padded neighbor tables), and ``--backend
-fused|reference`` selects the WFAgg execution backend.  Irregular
-topologies require the fused backend (the reference pipeline uses
-static per-filter keep counts), which the CLI enforces up front.
+irregular-degree path (padded neighbor tables), ``--backend
+fused|reference`` selects the WFAgg execution backend, and
+``--scenario churn|link_failure|partition|mobility|sleeper`` runs the
+whole experiment under a round-varying topology schedule (one jit,
+lax.scan over the schedule — the graph and the Byzantine set change
+every round with no retrace) and prints the DART-style per-round
+robustness time series.  Irregular topologies and dynamic scenarios
+require the fused backend (the reference pipeline uses static
+per-filter keep counts), which the CLI enforces up front.
 """
 import argparse
 
@@ -17,7 +22,9 @@ import numpy as np
 
 from repro.core.topology import make_topology
 from repro.data.synthetic import SyntheticImages
-from repro.dfl.engine import AGGREGATOR_NAMES, DFLConfig, run_experiment
+from repro.dfl.dynamics import SCENARIO_NAMES, make_schedule
+from repro.dfl.engine import (AGGREGATOR_NAMES, DFLConfig,
+                              run_dynamic_experiment, run_experiment)
 
 
 def main() -> None:
@@ -41,12 +48,26 @@ def main() -> None:
                     choices=("fused", "reference"),
                     help="WFAgg execution backend (fused = gather-free "
                          "indexed kernels; reference = multi-pass jnp)")
+    ap.add_argument("--scenario", default="",
+                    choices=("",) + SCENARIO_NAMES,
+                    help="dynamic-topology scenario: the experiment runs "
+                         "under a round-varying neighbor-table schedule "
+                         "(see repro.dfl.dynamics.SCENARIOS)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.topology == "erdos_renyi" and args.backend == "reference":
         ap.error("--topology erdos_renyi needs --backend fused: the "
                  "reference pipeline cannot honor irregular (padded) "
                  "neighbor tables")
+    if args.scenario:
+        if args.backend == "reference":
+            ap.error("--scenario needs --backend fused: dynamic schedules "
+                     "run through the gather-free valid-masked path")
+        if args.centralized:
+            ap.error("--scenario is a decentralized (gossip) feature")
+        if args.aggregator not in ("wfagg", "alt_wfagg"):
+            ap.error("--scenario requires --aggregator wfagg|alt_wfagg "
+                     "(the only valid-mask-aware aggregation path)")
 
     kind = "complete" if args.centralized else args.topology
     topo = make_topology(n_nodes=args.nodes, degree=args.degree,
@@ -56,18 +77,40 @@ def main() -> None:
     cfg = DFLConfig(aggregator=args.aggregator, attack=args.attack,
                     model=args.model, centralized=args.centralized,
                     seed=args.seed, wfagg_backend=args.backend)
-    out = run_experiment(cfg, topo, data, rounds=args.rounds, eval_every=1)
+    schedule = None
+    if args.scenario:
+        schedule = make_schedule(args.scenario, topo, args.rounds,
+                                 seed=args.seed)
+        out = run_dynamic_experiment(cfg, topo, data, schedule)
+    else:
+        out = run_experiment(cfg, topo, data, rounds=args.rounds,
+                             eval_every=1)
 
     degs = topo.degrees
     print(f"aggregator={args.aggregator} attack={args.attack} "
           f"{'CFL' if args.centralized else 'DFL'} rounds={args.rounds} "
           f"topology={kind} backend={args.backend} "
+          f"scenario={args.scenario or 'static'} "
           f"degrees={int(degs.min())}..{int(degs.max())}")
     mal = set(map(int, topo.malicious.nonzero()[0]))
     print(f"malicious nodes: {sorted(mal)}")
-    for e in out["trace"]:
-        print(f"round {e['round']:2d}  benign acc {100 * e['acc_benign_mean']:6.2f}%  "
-              f"R2 {e['r_squared']:8.4f}")
+    if schedule is not None:
+        dstats = schedule.degree_stats()
+        diff = schedule.diff()
+        for e in out["trace"]:
+            r = e["round"] - 1
+            churn = (f"  edges +{int(diff[r - 1][0])}/-{int(diff[r - 1][1])}"
+                     if r > 0 else "")
+            print(f"round {e['round']:2d}  benign acc "
+                  f"{100 * e['acc_benign_mean']:6.2f}%  "
+                  f"R2 {e['r_squared']:8.4f}  "
+                  f"deg {dstats[r][0]:.0f}/{dstats[r][1]:.1f}/{dstats[r][2]:.0f}"
+                  f"  mal {int(schedule.malicious[r].sum())}{churn}")
+    else:
+        for e in out["trace"]:
+            print(f"round {e['round']:2d}  benign acc "
+                  f"{100 * e['acc_benign_mean']:6.2f}%  "
+                  f"R2 {e['r_squared']:8.4f}")
 
     # paper Fig. 7: per-node accuracy at the final round
     print("\nper-node final accuracy (x = malicious):")

@@ -1,17 +1,33 @@
 #!/usr/bin/env bash
 # Tier-1 gate + benchmark smoke: run before merging.
 #
-#   ./scripts/check.sh          tier-1 tests + smoke-size microbench
-#   FAST=1 ./scripts/check.sh   skip the slow end-to-end trainer tests
+#   ./scripts/check.sh                 tier-1 tests + smoke-size microbench
+#   FAST=1 ./scripts/check.sh          skip the slow end-to-end trainer tests
+#   DYNAMICS_SMOKE=1 ./scripts/check.sh
+#                                      dynamics-only smoke: one short
+#                                      --scenario churn experiment through
+#                                      the scenario engine (the CI
+#                                      dynamics job), skipping the full
+#                                      pytest + microbench gate
 #
 # The microbench invocation exercises the Pallas kernel paths (fused
-# robust_stats incl. the batched and +prev variants) at a smoke size so
-# the bench path itself cannot rot silently.  Smoke rows are NOT
-# appended to the committed benchmarks/BENCH_agg.json baseline — real
-# trajectory entries come from `python -m benchmarks.run`.
+# robust_stats incl. the batched, +prev and schedule-swap variants) at a
+# smoke size so the bench path itself cannot rot silently.  Smoke rows
+# are NOT appended to the committed benchmarks/BENCH_agg.json baseline —
+# real trajectory entries come from `python -m benchmarks.run`.  Set
+# BENCH_JSON=<path> to append this run's rows somewhere (CI appends to
+# its workspace copy of BENCH_agg.json so the uploaded artifact carries
+# the run's own numbers, not just the committed baseline).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${DYNAMICS_SMOKE:-0}" == "1" ]]; then
+  python examples/dfl_paper_experiment.py --scenario churn --rounds 3 \
+    --model mlp --aggregator wfagg --attack ipm_100
+  echo "check.sh: dynamics smoke OK"
+  exit 0
+fi
 
 if [[ "${FAST:-0}" == "1" ]]; then
   python -m pytest -x -q -m "not slow"
@@ -19,5 +35,6 @@ else
   python -m pytest -x -q
 fi
 
-python benchmarks/agg_microbench.py --kernels --sizes 8x4096
+python benchmarks/agg_microbench.py --kernels --sizes 8x4096 \
+  --bench-json "${BENCH_JSON:-}"
 echo "check.sh: OK"

@@ -159,33 +159,13 @@ def clustering_select_from_dist(D0: Array) -> Array:
     cluster.  Uses the Lance-Williams recurrence so the merge loop is
     jit-compatible with static candidate count K.  Shared by the jnp
     path, the Gram-statistics path and the fused Pallas backend.
+
+    The all-valid special case of ``clustering_select_from_dist_dyn``
+    (bit-identical: every merge gate is open and the final mask is not
+    valid-restricted), so the subtle recurrence lives in ONE place.
     """
-    K = D0.shape[0]
-    if K <= 2:
-        return jnp.ones((K,), dtype=bool)
-    eye = jnp.eye(K, dtype=bool)
-
-    def merge_step(carry, _):
-        D, active, sizes, assign = carry
-        pair_ok = active[:, None] & active[None, :] & ~eye
-        Dm = jnp.where(pair_ok, D, jnp.inf)
-        flat = jnp.argmin(Dm)
-        i0, j0 = flat // K, flat % K
-        i = jnp.minimum(i0, j0)
-        j = jnp.maximum(i0, j0)
-        ni, nj = sizes[i], sizes[j]
-        # average-linkage Lance-Williams: d(k, i u j) = (ni*d(k,i)+nj*d(k,j))/(ni+nj)
-        newrow = (ni * D[i] + nj * D[j]) / (ni + nj)
-        D = D.at[i, :].set(newrow).at[:, i].set(newrow)
-        active = active.at[j].set(False)
-        sizes = sizes.at[i].set(ni + nj).at[j].set(0.0)
-        assign = jnp.where(assign == j, i, assign)
-        return (D, active, sizes, assign), None
-
-    init = (D0, jnp.ones((K,), bool), jnp.ones((K,), D0.dtype), jnp.arange(K))
-    (_, _, sizes, assign), _ = jax.lax.scan(merge_step, init, None, length=K - 2)
-    big = jnp.argmax(sizes)  # slot of the larger of the two surviving clusters
-    return assign == big
+    return clustering_select_from_dist_dyn(
+        D0, jnp.ones((D0.shape[0],), dtype=bool))
 
 
 def clustering_select_from_dist_dyn(D0: Array, valid: Array) -> Array:

@@ -13,7 +13,7 @@ def micro_accuracy(logits: Array, labels: Array) -> Array:
     return jnp.mean((pred == labels).astype(jnp.float32))
 
 
-def r_squared(vectors: Array) -> Array:
+def r_squared(vectors: Array, weights: Array | None = None) -> Array:
     """Multivariate R^2 consistency metric (Eq. 7).
 
     R^2 = 1 - SSR/SST with
@@ -21,11 +21,20 @@ def r_squared(vectors: Array) -> Array:
       SST = sum_i ||v_i||^2          (normalizer)
 
     Applied to the flat local models of the *benign* nodes: ~1 means the
-    decentralized models have converged to a consensus.
+    decentralized models have converged to a consensus.  ``weights``
+    selects the cohort with a TRACED (0/1) mask instead of boolean
+    indexing — dynamic Byzantine sets can't be indexed under jit.
     """
-    vbar = jnp.mean(vectors, axis=0)
-    ssr = jnp.sum((vectors - vbar[None, :]) ** 2)
-    sst = jnp.sum(vectors**2)
+    if weights is None:
+        vbar = jnp.mean(vectors, axis=0)
+        ssr = jnp.sum((vectors - vbar[None, :]) ** 2)
+        sst = jnp.sum(vectors**2)
+    else:
+        w = weights.astype(vectors.dtype)
+        n = jnp.maximum(w.sum(), 1.0)
+        vbar = jnp.einsum("n,nd->d", w, vectors) / n
+        ssr = jnp.sum(w[:, None] * (vectors - vbar[None, :]) ** 2)
+        sst = jnp.sum(w[:, None] * vectors**2)
     return 1.0 - ssr / jnp.maximum(sst, 1e-12)
 
 

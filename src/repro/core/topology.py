@@ -9,7 +9,17 @@ represented with a PADDED neighbor table: ``neighbor_indices`` is
 (N, K_max) where padded slots repeat the node's own index (a safe row to
 DMA — the self model is always finite) and ``neighbor_valid`` marks the
 real edges.  The gather-free aggregation kernels and the WFAgg mask
-logic honor the valid mask, so per-node degrees may differ freely.
+logic honor the valid mask, so per-node degrees may differ freely —
+including degree 0 (a churned-out node gets an all-invalid row and the
+aggregation falls back to its own model; see robust_stats' empty-median
+guard).
+
+Dynamic topologies are a SCHEDULE of padded tables: ``TopologySchedule``
+stacks one (N, K) neighbor table + valid mask + malicious mask per round
+(K = the max degree over ALL rounds, so every round shares one shape and
+a jitted round function compiles exactly once).  ``dfl.dynamics`` builds
+schedules from composable scenario generators (churn, link failure,
+partition, mobility, sleeper attackers).
 """
 from __future__ import annotations
 
@@ -74,15 +84,21 @@ def complete_graph(n: int) -> np.ndarray:
 
 
 def erdos_renyi(n: int, p: float, seed: int = 0, min_degree: int = 1) -> np.ndarray:
-    """Random G(n, p) graph, patched to ensure min_degree (adds ring edges)."""
+    """Random G(n, p) graph, patched to ensure min_degree (adds ring edges).
+
+    ``min_degree=0`` skips the patching and may leave isolated nodes —
+    the padded-table path represents those as all-invalid rows and the
+    aggregation keeps their local model (mobility scenarios use this).
+    """
     rng = np.random.default_rng(seed)
     upper = rng.random((n, n)) < p
     adj = np.triu(upper, 1)
     adj = adj | adj.T
     # guarantee connectivity floor with a ring
-    for i in range(n):
-        if adj[i].sum() < min_degree:
-            adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
+    if min_degree > 0:
+        for i in range(n):
+            if adj[i].sum() < min_degree:
+                adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
     return adj
 
 
@@ -112,26 +128,27 @@ def close_malicious(n: int, n_mal: int, degree: int = 8) -> np.ndarray:
     return mal
 
 
-def neighbor_table(adj: np.ndarray) -> np.ndarray:
-    """(N, K) neighbor index table; requires a regular graph (equal degrees)."""
-    degs = adj.sum(axis=1)
-    k = int(degs[0])
-    if not np.all(degs == k):
-        raise ValueError("neighbor_table requires a regular graph")
-    return np.stack([np.nonzero(adj[i])[0] for i in range(adj.shape[0])]).astype(np.int32)
-
-
-def padded_neighbor_table(adj: np.ndarray):
+def padded_neighbor_table(adj: np.ndarray, width: int = None):
     """(table (N, K_max) int32, valid (N, K_max) bool) for ANY graph.
 
     Padded slots carry the node's OWN index: the indexed aggregation
     kernels DMA that row like any other candidate (always a finite,
     in-bounds address) and the valid mask excludes it from every
-    median/mask/score computation downstream.
+    median/mask/score computation downstream.  Degree-0 rows (a fully
+    churned-out node) come back all-invalid and all-self — still a safe
+    DMA target, and the valid-aware aggregation keeps the local model.
+
+    ``width`` forces the table to a wider K than this graph needs — the
+    schedule builders use it so every round of a dynamic topology shares
+    ONE (N, K) shape (no retrace when the graph changes).
     """
     n = adj.shape[0]
     degs = adj.sum(axis=1).astype(np.int64)
     k_max = max(1, int(degs.max()))
+    if width is not None:
+        if width < k_max:
+            raise ValueError(f"width {width} < max degree {k_max}")
+        k_max = max(1, int(width))
     table = np.empty((n, k_max), dtype=np.int32)
     valid = np.zeros((n, k_max), dtype=bool)
     for i in range(n):
@@ -140,6 +157,91 @@ def padded_neighbor_table(adj: np.ndarray):
         table[i, len(nbrs):] = i
         valid[i, : len(nbrs)] = True
     return table, valid
+
+
+# ---------------------------------------------------------------------------
+# topology schedules (dynamic graphs, one entry per gossip round)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A round-indexed stack of padded neighbor tables + Byzantine masks.
+
+    Every round is padded to ONE common width K (the max degree over all
+    rounds), so the whole schedule is scan-friendly: a jitted round
+    function that takes ``(neighbor_idx[r], valid[r], malicious[r])`` as
+    traced inputs compiles once and runs every round, however the graph
+    changes.  Built by ``schedule_from_adjacencies`` (or the scenario
+    generators in ``repro.dfl.dynamics``).
+    """
+
+    neighbor_idx: np.ndarray   # (R, N, K) int32, padded with self
+    valid: np.ndarray          # (R, N, K) bool, False on padded slots
+    malicious: np.ndarray      # (R, N) bool - per-round Byzantine set
+    adjacency: np.ndarray      # (R, N, N) bool - kept for eval/diffing
+
+    @property
+    def rounds(self) -> int:
+        return int(self.neighbor_idx.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.neighbor_idx.shape[1])
+
+    @property
+    def width(self) -> int:
+        """Common table width K (= max degree over all rounds)."""
+        return int(self.neighbor_idx.shape[2])
+
+    def degrees(self) -> np.ndarray:
+        """(R, N) true per-round per-node degree."""
+        return self.valid.sum(axis=2)
+
+    def degree_stats(self) -> np.ndarray:
+        """(R, 3) per-round [min, mean, max] degree."""
+        d = self.degrees()
+        return np.stack([d.min(axis=1), d.mean(axis=1), d.max(axis=1)],
+                        axis=1)
+
+    def diff(self) -> np.ndarray:
+        """(R-1, 2) undirected edges [added, removed] at each transition —
+        the round-over-round graph churn a scenario realizes."""
+        a = np.triu(self.adjacency, 1)
+        added = (~a[:-1] & a[1:]).sum(axis=(1, 2))
+        removed = (a[:-1] & ~a[1:]).sum(axis=(1, 2))
+        return np.stack([added, removed], axis=1)
+
+
+def schedule_from_adjacencies(adjs: np.ndarray,
+                              malicious: np.ndarray) -> TopologySchedule:
+    """Pad a (R, N, N) adjacency stack into a ``TopologySchedule``.
+
+    All rounds share one table width (the max degree over the whole
+    schedule) so the downstream jitted round function never retraces.
+    ``malicious`` may be static (N,) or per-round (R, N).
+    """
+    adjs = np.asarray(adjs, dtype=bool)
+    R, n, _ = adjs.shape
+    mal = np.asarray(malicious, dtype=bool)
+    if mal.ndim == 1:
+        mal = np.broadcast_to(mal, (R, n)).copy()
+    if mal.shape != (R, n):
+        raise ValueError(f"malicious shape {mal.shape} != {(R, n)}")
+    k_max = max(1, int(adjs.sum(axis=2).max()))
+    tables, valids = [], []
+    for r in range(R):
+        t, v = padded_neighbor_table(adjs[r], width=k_max)
+        tables.append(t)
+        valids.append(v)
+    return TopologySchedule(
+        neighbor_idx=np.stack(tables), valid=np.stack(valids),
+        malicious=mal, adjacency=adjs)
+
+
+def static_schedule(topo: Topology, rounds: int) -> TopologySchedule:
+    """The trivial schedule: the same graph + malicious set every round."""
+    adjs = np.broadcast_to(topo.adjacency, (rounds,) + topo.adjacency.shape)
+    return schedule_from_adjacencies(adjs, topo.malicious)
 
 
 def make_topology(

@@ -559,6 +559,35 @@ def _wfagg_batch_indexed(
     return out, new_state, info
 
 
+def realign_temporal_history(state: TemporalState,
+                             prev_idx: Array, prev_valid: Array,
+                             idx: Array, valid: Array) -> TemporalState:
+    """Re-key the slot-positional WFAgg-T ring buffers to a new slate.
+
+    ``hist_s``/``hist_b`` are (N, W, K) and keyed by neighbor SLOT; on a
+    round-varying topology a neighbor may occupy a different slot than
+    last round (padded tables pack valid neighbors as a prefix), so
+    without remapping the EWMA thresholds of Alg. 4 would score each
+    neighbor against some OTHER neighbor's history — a rejoining
+    attacker could inherit a clean record.  This matches slots by
+    neighbor IDENTITY: column k_new receives the history of the k_old
+    with ``idx[n, k_new] == prev_idx[n, k_old]`` (both slots valid), and
+    a neighbor unseen last round starts with a zeroed column — its
+    near-degenerate EWMA band makes the temporal filter abstain rather
+    than vouch for a stranger.  The (N, d) matrix ``prev`` needs no
+    remap (it is indexed by node id, identity-keyed by construction),
+    and on a static slate the match is the identity permutation (no-op).
+    """
+    match = ((idx[:, :, None] == prev_idx[:, None, :])
+             & valid.astype(bool)[:, :, None]
+             & prev_valid.astype(bool)[:, None, :])   # (N, K_new, K_old)
+    m = match.astype(state.hist_s.dtype)
+    return state._replace(
+        hist_s=jnp.einsum("nkj,nwj->nwk", m, state.hist_s),
+        hist_b=jnp.einsum("nkj,nwj->nwk", m, state.hist_b),
+    )
+
+
 def memory_passes(cfg: WFAggConfig, include_gather: bool = False,
                   indexed: bool = False) -> int:
     """Number of (K, d)-sized HBM passes per full-WFAgg aggregation.

@@ -1,0 +1,178 @@
+"""Topology-dynamics scenario engine: round-varying gossip graphs.
+
+The paper motivates WFAgg with "the adverse conditions ... of dynamic
+decentralized topologies", and the follow-up literature (DART, arXiv
+2407.08652; the topology-resilience study, arXiv 2407.05141) shows
+Byzantine robustness swings sharply once the graph varies round to
+round.  This module turns those conditions into data: each scenario
+generator precomputes a scan-friendly ``TopologySchedule`` — an
+(R, N, K) neighbor-table + valid-mask stack padded to ONE width across
+all rounds, plus an (R, N) per-round Byzantine mask — which the engine
+threads through ``round_fn(state, neighbor_idx, valid, mal_mask)`` as
+traced inputs.  One compile serves the whole schedule; the gather-free
+indexed kernels take the table as a jit argument, so a changing graph
+costs exactly one (N, K) index upload per round.
+
+Scenarios (``SCENARIOS`` registry, mirroring ``AGGREGATOR_NAMES``):
+
+  churn         nodes leave/rejoin via a 2-state Markov chain; a down
+                node loses every incident edge (degree may hit 0 — the
+                padded row goes all-invalid and the node keeps its local
+                model until it rejoins)
+  link_failure  every base-graph edge fails independently per round
+  partition     the graph splits into two halves for a window of rounds,
+                then heals (all cross-partition edges cut while split)
+  mobility      periodic rewiring: the graph is resampled Erdos-Renyi
+                every ``every`` rounds (nodes "move", neighborhoods
+                change wholesale)
+  sleeper       static graph, time-varying Byzantine set: attackers
+                behave benignly until their wake round (late-joining /
+                sleeper adversaries)
+
+All generators are deterministic in (topology, rounds, seed) and
+composable through ``schedule_from_adjacencies`` — hand-build any
+(R, N, N) adjacency stack + (R, N) malicious stack for conditions not
+listed here.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.topology import (
+    Topology,
+    TopologySchedule,
+    erdos_renyi,
+    schedule_from_adjacencies,
+    static_schedule,
+)
+
+__all__ = [
+    "SCENARIOS", "SCENARIO_NAMES", "make_schedule",
+    "churn_schedule", "link_failure_schedule", "partition_schedule",
+    "mobility_schedule", "sleeper_schedule", "static_schedule",
+]
+
+
+def _cut_node(adj: np.ndarray, down: np.ndarray) -> np.ndarray:
+    """Remove every edge incident to a down node (symmetric)."""
+    up = ~down
+    return adj & up[:, None] & up[None, :]
+
+
+def churn_schedule(topo: Topology, rounds: int, seed: int = 0,
+                   p_leave: float = 0.15, p_join: float = 0.5,
+                   ) -> TopologySchedule:
+    """Node churn: each round an up node leaves w.p. ``p_leave`` and a
+    down node rejoins w.p. ``p_join`` (2-state Markov chain per node).
+    A down node exchanges with nobody — all its edges vanish in both
+    directions, so neighbors see a shrunken slate and the node itself
+    gets an all-invalid row (self-fallback aggregate).  Malicious nodes
+    churn like everyone else: a down attacker is also marked benign for
+    the round (it sends nothing to poison)."""
+    rng = np.random.default_rng(seed)
+    n = topo.n_nodes
+    down = np.zeros(n, dtype=bool)
+    adjs, mals = [], []
+    for _ in range(rounds):
+        u = rng.random(n)
+        down = np.where(down, u >= p_join, u < p_leave)
+        adjs.append(_cut_node(topo.adjacency, down))
+        mals.append(topo.malicious & ~down)
+    return schedule_from_adjacencies(np.stack(adjs), np.stack(mals))
+
+
+def link_failure_schedule(topo: Topology, rounds: int, seed: int = 0,
+                          p_fail: float = 0.2) -> TopologySchedule:
+    """Random link failure: every base edge drops independently w.p.
+    ``p_fail`` each round (symmetric — a failed link is failed for both
+    endpoints, as a lossy radio link would be)."""
+    rng = np.random.default_rng(seed)
+    n = topo.n_nodes
+    adjs = []
+    for _ in range(rounds):
+        keep = rng.random((n, n)) >= p_fail
+        keep = np.triu(keep, 1)
+        keep = keep | keep.T
+        adjs.append(topo.adjacency & keep)
+    return schedule_from_adjacencies(np.stack(adjs), topo.malicious)
+
+
+def partition_schedule(topo: Topology, rounds: int, seed: int = 0,
+                       split_at: int = None, heal_at: int = None,
+                       ) -> TopologySchedule:
+    """Partition-and-heal: from round ``split_at`` (default R//3) to
+    ``heal_at`` (default 2R//3) the network splits into two halves and
+    every cross-partition edge is cut; outside that window the base
+    graph is intact.  The halves are a random balanced bisection."""
+    rng = np.random.default_rng(seed)
+    n = topo.n_nodes
+    split_at = rounds // 3 if split_at is None else split_at
+    heal_at = (2 * rounds) // 3 if heal_at is None else heal_at
+    side = np.zeros(n, dtype=bool)
+    side[rng.permutation(n)[: n // 2]] = True
+    same_side = side[:, None] == side[None, :]
+    adjs = []
+    for r in range(rounds):
+        partitioned = split_at <= r < heal_at
+        adjs.append(topo.adjacency & same_side if partitioned
+                    else topo.adjacency)
+    return schedule_from_adjacencies(np.stack(adjs), topo.malicious)
+
+
+def mobility_schedule(topo: Topology, rounds: int, seed: int = 0,
+                      every: int = 2, min_degree: int = 0,
+                      ) -> TopologySchedule:
+    """Mobility as periodic rewiring: every ``every`` rounds the graph is
+    resampled Erdos-Renyi at the base topology's mean degree (nodes move,
+    whole neighborhoods change).  ``min_degree=0`` allows transiently
+    isolated nodes — the realistic mobile case the padded degree-0 path
+    exists for."""
+    n = topo.n_nodes
+    p = float(topo.degrees.mean()) / max(n - 1, 1)
+    adjs, cur = [], None
+    for r in range(rounds):
+        if cur is None or r % max(every, 1) == 0:
+            cur = erdos_renyi(n, p, seed=seed + r, min_degree=min_degree)
+        adjs.append(cur)
+    return schedule_from_adjacencies(np.stack(adjs), topo.malicious)
+
+
+def sleeper_schedule(topo: Topology, rounds: int, seed: int = 0,
+                     wake_at: int = None) -> TopologySchedule:
+    """Sleeper attackers on a static graph: the Byzantine set is empty
+    until round ``wake_at`` (default R//2), when the topology's malicious
+    nodes switch on — the late-joining adversary that defeats purely
+    temporal trust (a sleeper builds perfect history first)."""
+    wake_at = rounds // 2 if wake_at is None else wake_at
+    n = topo.n_nodes
+    mal = np.zeros((rounds, n), dtype=bool)
+    mal[wake_at:] = topo.malicious
+    adjs = np.broadcast_to(topo.adjacency, (rounds, n, n))
+    return schedule_from_adjacencies(adjs, mal)
+
+
+ScenarioFn = Callable[..., TopologySchedule]
+
+SCENARIOS: Dict[str, ScenarioFn] = {
+    "static": static_schedule,
+    "churn": churn_schedule,
+    "link_failure": link_failure_schedule,
+    "partition": partition_schedule,
+    "mobility": mobility_schedule,
+    "sleeper": sleeper_schedule,
+}
+
+SCENARIO_NAMES = tuple(SCENARIOS)
+
+
+def make_schedule(name: str, topo: Topology, rounds: int,
+                  seed: int = 0, **params) -> TopologySchedule:
+    """Build a named scenario's schedule (the registry entry point)."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"choose from {SCENARIO_NAMES}")
+    if name == "static":
+        return static_schedule(topo, rounds, **params)
+    return SCENARIOS[name](topo, rounds, seed=seed, **params)

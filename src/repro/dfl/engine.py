@@ -12,6 +12,13 @@ The whole round is ONE jitted function, vmapped over nodes — 20 nodes x
 LeNet/MLP train concurrently.  On a TPU mesh the node axis shards over
 'data' (annotated below), which is the faithful decentralized execution
 the paper simulates with Python threads.
+
+Dynamic topologies: ``build_round_fn(..., dynamic=True)`` returns the
+round with the (N, K) neighbor table, (N, K) valid mask and (N,)
+Byzantine mask as TRACED inputs, and ``run_dynamic_experiment`` scans a
+``TopologySchedule`` (see ``repro.dfl.dynamics``) through it — the
+graph and the attacker set change every round on one compile, with the
+per-round accuracy/consistency series computed inside the scan.
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk
 from repro.core import metrics as met
 from repro.core import wfagg as wf
-from repro.core.topology import Topology
+from repro.core.topology import Topology, TopologySchedule
 from repro.data.synthetic import SyntheticImages
 from repro.models.lenet import init_lenet, init_mlp_classifier, lenet_fwd, mlp_classifier_fwd
 
@@ -81,7 +88,11 @@ def _model_fns(cfg: DFLConfig):
     return init_mlp_classifier, mlp_classifier_fwd
 
 
-def init_dfl_state(cfg: DFLConfig, topo: Topology) -> DFLState:
+def init_dfl_state(cfg: DFLConfig, topo: Topology,
+                   degree: Optional[int] = None) -> DFLState:
+    """Fresh per-node models + temporal state.  ``degree`` overrides the
+    neighbor-table width K (dynamic schedules are padded to the max
+    degree over ALL rounds, which may exceed the base topology's)."""
     init_fn, _ = _model_fns(cfg)
     N = topo.n_nodes
     keys = jax.random.split(jax.random.PRNGKey(cfg.seed), N)
@@ -89,7 +100,8 @@ def init_dfl_state(cfg: DFLConfig, topo: Topology) -> DFLState:
     momentum = jax.tree.map(jnp.zeros_like, params)
     flat_one, _ = ravel_pytree(jax.tree.map(lambda x: x[0], params))
     d = flat_one.shape[0]
-    K = topo.n_nodes if cfg.centralized else topo.degree
+    K = degree if degree is not None else (
+        topo.n_nodes if cfg.centralized else topo.degree)
     temporal = None
     if cfg.aggregator in ("wfagg", "alt_wfagg") and not cfg.centralized:
         # Gather-free gossip rounds keep the temporal ``prev`` as the
@@ -115,12 +127,14 @@ def init_dfl_state(cfg: DFLConfig, topo: Topology) -> DFLState:
 # local training
 # ---------------------------------------------------------------------------
 
-def _local_train(cfg: DFLConfig, data: SyntheticImages, topo: Topology,
+def _local_train(cfg: DFLConfig, data: SyntheticImages, malicious: Array,
                  params, momentum, rnd: Array):
-    """One round of local minibatch SGD for every node (vmapped)."""
+    """One round of local minibatch SGD for every node (vmapped).
+
+    ``malicious`` is the round's (N,) Byzantine mask — a traced input, so
+    time-varying attacker sets (sleeper scenarios) reuse one compile."""
     _, fwd = _model_fns(cfg)
     p = cfg.paper
-    malicious = jnp.asarray(topo.malicious)
     label_flip = cfg.attack == "label_flip"
 
     def node_train(node_id, params_i, mom_i):
@@ -147,7 +161,7 @@ def _local_train(cfg: DFLConfig, data: SyntheticImages, topo: Topology,
         )
         return params_i, mom_i
 
-    node_ids = jnp.arange(topo.n_nodes)
+    node_ids = jnp.arange(malicious.shape[0])
     return jax.vmap(node_train)(node_ids, params, momentum)
 
 
@@ -155,16 +169,19 @@ def _local_train(cfg: DFLConfig, data: SyntheticImages, topo: Topology,
 # attacks on trained models
 # ---------------------------------------------------------------------------
 
-def _apply_attacks(cfg: DFLConfig, topo: Topology, flat_models: Array, rnd: Array) -> Array:
+def _apply_attacks(cfg: DFLConfig, malicious: Array, flat_models: Array,
+                   rnd: Array) -> Array:
     """Replace Byzantine rows of (N, d) with attacked models.
 
     Routed through ``core.attacks.apply_matrix_attack`` (the shared
     masked-stack implementation) so AttackConfig hyper-parameters — ALIE
-    z_max, noise mu/sigma, IPM eps — are honored instead of hardcoded."""
+    z_max, noise mu/sigma, IPM eps — are honored instead of hardcoded.
+    ``malicious`` is traced: dynamic scenarios swap the Byzantine set
+    round to round without retracing (apply_matrix_attack's benign-cohort
+    statistics are masked sums, never boolean indexing)."""
     key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), rnd)
     return atk.apply_matrix_attack(
-        cfg.attack, flat_models, jnp.asarray(topo.malicious), key,
-        cfg.attack_params)
+        cfg.attack, flat_models, malicious, key, cfg.attack_params)
 
 
 # ---------------------------------------------------------------------------
@@ -228,7 +245,44 @@ def _aggregate_one(cfg: DFLConfig, local: Array, updates: Array,
 # the round function
 # ---------------------------------------------------------------------------
 
-def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Callable:
+def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
+                   dynamic: bool = False) -> Callable:
+    """One jitted DFL round.
+
+    ``dynamic=False`` (default): returns ``round_fn(state)`` closed over
+    the static topology — the paper's experiment.
+
+    ``dynamic=True``: returns ``round_fn(state, neighbor_idx, valid,
+    mal_mask)`` taking the round's (N, K) neighbor table, (N, K) valid
+    mask and (N,) Byzantine mask as TRACED inputs — one compile serves a
+    whole round-varying schedule (churn, link failure, mobility, sleeper
+    attackers), graph after graph, with no retrace.  Requires the
+    gather-free wfagg/alt_wfagg fused path (the only aggregation route
+    that honors per-round valid masks).
+
+    NOTE: the WFAgg-T ring buffers in ``state.temporal`` are keyed by
+    neighbor SLOT.  ``run_dynamic_experiment`` re-keys them to each
+    round's slate by neighbor identity (``wf.realign_temporal_history``)
+    before calling this; a caller driving rounds by hand on a changing
+    slate must do the same, or neighbors inherit each other's histories
+    when their slot shifts.
+    """
+    if dynamic:
+        if cfg.centralized:
+            raise NotImplementedError("dynamic schedules are a gossip "
+                                      "(decentralized) feature")
+        if cfg.aggregator not in ("wfagg", "alt_wfagg"):
+            raise NotImplementedError(
+                f"aggregator {cfg.aggregator!r} assumes a static regular "
+                "neighbor table; dynamic schedules run through the "
+                "wfagg/alt_wfagg gather-free path")
+        if cfg.wfagg_backend != "fused":
+            raise NotImplementedError(
+                "dynamic schedules need wfagg_backend='fused': the "
+                "reference pipeline uses static per-filter keep counts "
+                "and cannot honor a per-round valid mask")
+        return jax.jit(_make_round_core(cfg, data))
+
     neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K) padded
     # None on regular graphs: the indexed kernels then skip the mask and
     # the reference backend stays available for parity runs.
@@ -240,18 +294,28 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Cal
             f"aggregator {cfg.aggregator!r} assumes a regular neighbor "
             "table; irregular (padded) topologies are supported by the "
             "wfagg/alt_wfagg gather-free path")
-    _, fwd = _model_fns(cfg)
+    malicious = jnp.asarray(topo.malicious)
+    core = _make_round_core(cfg, data)
+    return jax.jit(lambda state: core(state, neighbor_idx, neighbor_valid,
+                                      malicious))
 
-    def round_fn(state: DFLState) -> DFLState:
+
+def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
+    """The round body, parameterized by the per-round topology inputs."""
+
+    def round_core(state: DFLState, neighbor_idx: Array,
+                   neighbor_valid: Optional[Array],
+                   mal_mask: Array) -> DFLState:
         # CFL: the server's WFAgg-E reference is the PREVIOUS round's
         # global model (captured before local training — the mean of
         # freshly-received models would itself be poisoned under IPM).
         prev_flat, _ = _ravel_nodes(state.node_params)
         params, momentum = _local_train(
-            cfg, data, topo, state.node_params, state.node_momentum, state.rnd
+            cfg, data, mal_mask, state.node_params, state.node_momentum,
+            state.rnd
         )
         flat, unravel_one = _ravel_nodes(params)
-        flat = _apply_attacks(cfg, topo, flat, state.rnd)
+        flat = _apply_attacks(cfg, mal_mask, flat, state.rnd)
 
         if cfg.centralized:
             # one server-side aggregation over all N received models
@@ -269,7 +333,7 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Cal
                 # tensor never exists, the kernels DMA each neighbor's
                 # d-blocks straight from the (N, d) model matrix (the
                 # reference backend gathers, for parity runs)
-                wcfg = _wfagg_full_config(cfg, topo.degree)
+                wcfg = _wfagg_full_config(cfg, neighbor_idx.shape[1])
                 new_flat, new_temporal, _ = wf.wfagg_batch(
                     flat, flat, state.temporal, wcfg,
                     neighbor_idx=neighbor_idx, valid=neighbor_valid)
@@ -289,7 +353,7 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages) -> Cal
         new_params = jax.vmap(unravel_one)(new_flat)
         return DFLState(new_params, momentum, new_temporal, state.rnd + 1)
 
-    return jax.jit(round_fn)
+    return round_core
 
 
 def _ravel_nodes(params):
@@ -304,13 +368,24 @@ def _ravel_nodes(params):
 # ---------------------------------------------------------------------------
 
 def evaluate(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
-             state: DFLState, n_test: int = 512) -> Dict[str, Any]:
+             state: DFLState, n_test: int = 512,
+             malicious: Optional[np.ndarray] = None,
+             adjacency: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    """Per-node accuracy + consistency snapshot.
+
+    ``malicious``/``adjacency`` override the static topology's — dynamic
+    scenarios pass the schedule's ever-malicious set and the evaluation
+    round's graph, so the benign cohort excludes every attacker and the
+    malicious-neighbor buckets reflect the graph the nodes actually
+    saw."""
     _, fwd = _model_fns(cfg)
     imgs, labels = data.test_set(n_test)
     accs = jax.vmap(lambda p: met.micro_accuracy(fwd(p, imgs), labels))(state.node_params)
     accs = np.asarray(accs)
-    benign = ~topo.malicious
-    mal_nb = topo.malicious_neighbor_count()
+    mal = np.asarray(topo.malicious if malicious is None else malicious)
+    adj = np.asarray(topo.adjacency if adjacency is None else adjacency)
+    benign = ~mal
+    mal_nb = (adj & mal[None, :]).sum(axis=1)
     flat, _ = _ravel_nodes(state.node_params)
     r2 = float(met.r_squared(jnp.asarray(np.asarray(flat)[benign])))
     by_mn = {}
@@ -328,9 +403,20 @@ def evaluate(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     }
 
 
+def _series_from_trace(trace) -> Dict[str, list]:
+    """Columnar per-round time series (plottable) from a trace of
+    ``evaluate`` dicts."""
+    return {
+        "round": [e["round"] for e in trace],
+        "acc_benign_mean": [e["acc_benign_mean"] for e in trace],
+        "r_squared": [e["r_squared"] for e in trace],
+    }
+
+
 def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
                    rounds: Optional[int] = None, eval_every: int = 1) -> Dict[str, Any]:
-    """Run a full DFL experiment; returns the per-round metric trace."""
+    """Run a full DFL experiment; returns the per-round metric trace and
+    the columnar ``series`` time series (accuracy, consistency)."""
     rounds = rounds or cfg.paper.rounds
     state = init_dfl_state(cfg, topo)
     round_fn = build_round_fn(cfg, topo, data)
@@ -341,5 +427,98 @@ def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
             e = evaluate(cfg, topo, data, state)
             e["round"] = r + 1
             trace.append(e)
-    return {"trace": trace, "final": trace[-1], "aggregator": cfg.aggregator,
+    return {"trace": trace, "final": trace[-1],
+            "series": _series_from_trace(trace),
+            "aggregator": cfg.aggregator,
             "attack": cfg.attack, "centralized": cfg.centralized}
+
+
+# ---------------------------------------------------------------------------
+# dynamic-topology experiments (round-varying schedules)
+# ---------------------------------------------------------------------------
+
+def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
+                           data: SyntheticImages,
+                           schedule: TopologySchedule,
+                           n_test: int = 256) -> Dict[str, Any]:
+    """Run a DFL experiment under a round-varying topology schedule.
+
+    ONE jit: ``lax.scan`` over the (R, N, K) neighbor-table / valid-mask
+    / (R, N) malicious-mask schedule, with the round function taking all
+    three as traced per-round inputs — the graph and the Byzantine set
+    change every round, the compile happens once.  Per-round accuracy
+    and consistency are computed INSIDE the scan (a DART-style
+    robustness time series), so dynamic scenarios are plottable without
+    host round-trips.  The returned dict keeps ``run_experiment``'s
+    shape (trace / final / series).
+    """
+    if schedule.n_nodes != topo.n_nodes:
+        raise ValueError(
+            f"schedule is for {schedule.n_nodes} nodes, topology has "
+            f"{topo.n_nodes}")
+    state = init_dfl_state(cfg, topo, degree=schedule.width)
+    round_core = build_round_fn(cfg, topo, data, dynamic=True)
+    _, fwd = _model_fns(cfg)
+    imgs, labels = data.test_set(n_test)
+    sched = (jnp.asarray(schedule.neighbor_idx),
+             jnp.asarray(schedule.valid),
+             jnp.asarray(schedule.malicious))
+    # Evaluation cohort: a node that is malicious in ANY round is an
+    # attacker, full stop — a churned-out (or not-yet-woken) attacker
+    # sends nothing to poison that round (the per-round mask drives the
+    # ATTACK side), but its own stored model is still attacker state and
+    # must not dilute the benign accuracy/consistency series.
+    ever_mal = jnp.asarray(schedule.malicious.any(axis=0))
+
+    @jax.jit
+    def run(state, neighbor_idx, valid, malicious):
+        def body(carry, xs):
+            st, prev_idx, prev_val = carry
+            idx, val, mal = xs
+            if st.temporal is not None:
+                # the WFAgg-T ring buffers are slot-keyed: re-key them to
+                # this round's slate by neighbor IDENTITY, so a neighbor
+                # that shifted slots (or rejoined) is scored against ITS
+                # history, not whoever held the slot before
+                st = st._replace(temporal=wf.realign_temporal_history(
+                    st.temporal, prev_idx, prev_val, idx, val))
+            st = round_core(st, idx, val, mal)
+            accs = jax.vmap(
+                lambda p: met.micro_accuracy(fwd(p, imgs), labels)
+            )(st.node_params)
+            benign = ~ever_mal
+            bw = benign.astype(jnp.float32)
+            acc_benign = jnp.sum(accs * bw) / jnp.maximum(bw.sum(), 1.0)
+            flat, _ = _ravel_nodes(st.node_params)
+            return ((st, idx, val),
+                    (accs, acc_benign, met.r_squared(flat, weights=bw)))
+        # the round-0 "previous" slate is round 0's own (identity match:
+        # the buffers are all-zero anyway, any remap is a no-op)
+        init = (state, neighbor_idx[0], valid[0])
+        (st, _, _), out = jax.lax.scan(
+            body, init, (neighbor_idx, valid, malicious))
+        return st, out
+
+    state, (acc_all, acc_benign, r2) = run(state, *sched)
+    acc_all = np.asarray(acc_all)
+    acc_benign = np.asarray(acc_benign)
+    r2 = np.asarray(r2)
+    R = schedule.rounds
+    trace = [{
+        "round": r + 1,
+        "acc_benign_mean": float(acc_benign[r]),
+        "r_squared": float(r2[r]),
+        "acc_all": acc_all[r].tolist(),
+    } for r in range(R)]
+    # full evaluation (incl. malicious-neighbor buckets) under the FINAL
+    # round's graph, with the ever-malicious cohort (same n_test as the
+    # in-scan series, so final agrees with trace[-1])
+    final = evaluate(cfg, topo, data, state, n_test=n_test,
+                     malicious=np.asarray(ever_mal),
+                     adjacency=schedule.adjacency[-1])
+    final["round"] = R
+    series = _series_from_trace(trace)
+    series["degree_min_mean_max"] = schedule.degree_stats().tolist()
+    return {"trace": trace, "final": final, "series": series,
+            "aggregator": cfg.aggregator, "attack": cfg.attack,
+            "centralized": cfg.centralized}

@@ -221,6 +221,12 @@ def _robust_stats_indexed_kernel(*refs, K: int, has_prev: bool,
         kar = jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)
         med = 0.5 * (jnp.sum(jnp.where(kar == lo, srt, 0.0), axis=0)
                      + jnp.sum(jnp.where(kar == hi, srt, 0.0), axis=0))
+        # Degree-0 guard: an all-invalid row (fully churned-out node) has
+        # no middle element — the one-hot picks +inf and 0 * inf would
+        # poison dotmed with NaNs.  Zero is the safe empty median: every
+        # accumulated statistic stays finite and the caller's valid mask
+        # rejects all slots, so the node keeps its local model.
+        med = jnp.where(v > 0, med, jnp.zeros_like(med))
 
         diff = u - med[None, :]
         p_dist2 = jnp.sum(diff * diff, axis=1)

@@ -84,6 +84,10 @@ def robust_stats_indexed_ref(
     lo, hi = (v - 1) // 2, v // 2
     take = lambda j: jnp.take_along_axis(srt, j[:, None, None], axis=1)[:, 0, :]
     med = 0.5 * (take(lo) + take(hi))                # (N, D)
+    # degree-0 rows have no valid middle (the take lands on +inf): the
+    # empty median is 0, matching the kernel's guard — all stats finite,
+    # and the caller's valid mask makes the node keep its local model
+    med = jnp.where((v > 0)[:, None], med, 0.0)
     diff = u - med[:, None, :]
     dist2 = jnp.sum(diff * diff, axis=-1)
     dotmed = jnp.einsum("nkd,nd->nk", u, med)

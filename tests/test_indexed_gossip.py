@@ -311,10 +311,11 @@ def test_engine_attacks_honor_attack_config():
     mal = np.asarray(topo.malicious)
     benign = np.asarray(flat)[~mal]
 
+    mal_mask = jnp.asarray(topo.malicious)
     for zmax in (0.5, 1.5):
         cfg = eng.DFLConfig(attack="alie",
                             attack_params=atk.AttackConfig(alie_zmax=zmax))
-        out = np.asarray(eng._apply_attacks(cfg, topo, flat, rnd))
+        out = np.asarray(eng._apply_attacks(cfg, mal_mask, flat, rnd))
         expect = benign.mean(0) - zmax * benign.std(0)
         for j in np.nonzero(mal)[0]:
             np.testing.assert_allclose(out[j], expect, rtol=1e-4,
@@ -325,14 +326,14 @@ def test_engine_attacks_honor_attack_config():
     cfg = eng.DFLConfig(attack="noise", seed=0,
                         attack_params=atk.AttackConfig(noise_mu=5.0,
                                                        noise_sigma=0.0))
-    out = np.asarray(eng._apply_attacks(cfg, topo, flat, rnd))
+    out = np.asarray(eng._apply_attacks(cfg, mal_mask, flat, rnd))
     np.testing.assert_allclose(out[mal], np.asarray(flat)[mal] + 5.0,
                                rtol=1e-6)
 
     # custom IPM epsilon via the generic "ipm" name
     cfg = eng.DFLConfig(attack="ipm",
                         attack_params=atk.AttackConfig(ipm_eps=7.0))
-    out = np.asarray(eng._apply_attacks(cfg, topo, flat, rnd))
+    out = np.asarray(eng._apply_attacks(cfg, mal_mask, flat, rnd))
     np.testing.assert_allclose(out[mal][0], -7.0 * benign.mean(0), rtol=1e-4)
 
 
