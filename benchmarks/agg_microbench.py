@@ -158,6 +158,53 @@ def bench_dynamic(K: int, d: int, rounds: int = 4) -> List[Dict]:
     return rows
 
 
+def bench_one_launch(K: int, d: int, rounds: int = 4) -> List[Dict]:
+    """Single-launch vs two-launch gossip round: the same jitted scan of
+    gather-free WFAgg aggregations, once through the one-launch round
+    kernel (backend="fused": stats + in-kernel weights + combine in one
+    pallas_call) and once through the two-launch fallback
+    (backend="fused_two_launch").  Outputs are parity-exact (fp32); the
+    delta is the second kernel launch + the host scoring round-trip.
+    us_per_call is normalized PER ROUND.
+
+    Interpret-mode caveat: the one-launch kernel has more per-step
+    inputs/outputs, so at smoke sizes (d ~ 4k) the interpreter's fixed
+    per-step cost dominates and the one-launch row can come out SLOWER;
+    its d-proportional cost is the lower one (fewer d-sized buffer
+    carries), so at the baseline sizes (d >= ~100k, where the candidate
+    traffic the kernel exists for actually dominates) one-launch wins —
+    that is the comparison BENCH_agg.json records."""
+    N = 8
+    models = jax.random.normal(jax.random.PRNGKey(11), (N, d), jnp.float32)
+    Kb = min(K, N - 1)
+    nidx = jnp.asarray(
+        [[(n + o) % N for o in range(1, Kb + 1)] for n in range(N)], jnp.int32)
+
+    rows = []
+    for name, backend in (("wfagg_round[one-launch]", "fused"),
+                          ("wfagg_round[two-launch]", "fused_two_launch")):
+        wcfg = wf.WFAggConfig(backend=backend, use_temporal=False)
+
+        @jax.jit
+        def run(m, w=wcfg):
+            def body(m, _):
+                out, _, _ = wf.wfagg_batch(m, m, None, w, neighbor_idx=nidx)
+                return out, ()
+            m, _ = jax.lax.scan(body, m, jnp.arange(rounds))
+            return m
+
+        # interpret-mode timings are noisy right after the heavier bench
+        # sections (allocator churn): an extra warm-up call + more reps
+        # keep the one-vs-two-launch comparison honest
+        run(models).block_until_ready()
+        us = _timeit(run, models, reps=5) * 1e6 / rounds
+        rows.append(_row(name, Kb, d, us, backend,
+                         passes=wf.memory_passes(wcfg, include_gather=True,
+                                                 indexed=True),
+                         read_factor=float(N)))
+    return rows
+
+
 def bench_kernels(K: int, d: int) -> List[Dict]:
     from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
     from repro.kernels.robust_stats.ops import (
@@ -239,6 +286,7 @@ def main(argv=None) -> List[Dict]:
         if args.kernels:
             rows += bench_kernels(K, min(d, 200_000))
             rows += bench_dynamic(K, min(d, 200_000))
+            rows += bench_one_launch(K, min(d, 200_000))
     for r in rows:
         passes = f" passes={r['passes']}" if "passes" in r else ""
         print(f"{r['rule']:28s} K={r['K']:3d} d={r['d']:8d} "

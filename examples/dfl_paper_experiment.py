@@ -7,14 +7,15 @@ accuracy trace of the paper's Figure 7.
 
 Beyond-paper switches: ``--topology erdos_renyi`` runs the gather-free
 irregular-degree path (padded neighbor tables), ``--backend
-fused|reference`` selects the WFAgg execution backend, and
+fused|fused_two_launch|reference`` selects the WFAgg execution backend
+(fused = the single-launch round kernel, the default), and
 ``--scenario churn|link_failure|partition|mobility|sleeper`` runs the
 whole experiment under a round-varying topology schedule (one jit,
 lax.scan over the schedule — the graph and the Byzantine set change
 every round with no retrace) and prints the DART-style per-round
-robustness time series.  Irregular topologies and dynamic scenarios
-require the fused backend (the reference pipeline uses static
-per-filter keep counts), which the CLI enforces up front.
+robustness time series.  Every backend handles irregular topologies and
+dynamic scenarios: the fused paths in-kernel, the reference backend via
+the valid-aware pure-jnp oracle.
 """
 import argparse
 
@@ -45,9 +46,11 @@ def main() -> None:
                     help="gossip graph; erdos_renyi exercises the "
                          "irregular-degree (padded-table) path")
     ap.add_argument("--backend", default="fused",
-                    choices=("fused", "reference"),
-                    help="WFAgg execution backend (fused = gather-free "
-                         "indexed kernels; reference = multi-pass jnp)")
+                    choices=("fused", "fused_two_launch", "reference"),
+                    help="WFAgg execution backend (fused = single-launch "
+                         "gather-free round kernel; fused_two_launch = "
+                         "separate stats + combine launches; reference = "
+                         "multi-pass jnp, valid-aware)")
     ap.add_argument("--scenario", default="",
                     choices=("",) + SCENARIO_NAMES,
                     help="dynamic-topology scenario: the experiment runs "
@@ -55,14 +58,7 @@ def main() -> None:
                          "(see repro.dfl.dynamics.SCENARIOS)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.topology == "erdos_renyi" and args.backend == "reference":
-        ap.error("--topology erdos_renyi needs --backend fused: the "
-                 "reference pipeline cannot honor irregular (padded) "
-                 "neighbor tables")
     if args.scenario:
-        if args.backend == "reference":
-            ap.error("--scenario needs --backend fused: dynamic schedules "
-                     "run through the gather-free valid-masked path")
         if args.centralized:
             ap.error("--scenario is a decentralized (gossip) feature")
         if args.aggregator not in ("wfagg", "alt_wfagg"):

@@ -34,6 +34,11 @@ def main() -> None:
 
     print("\nWFAgg holds accuracy where the mean collapses — the paper's "
           "central claim (Table I, IPM-100 row).")
+    print("(Each WFAgg gossip round above ran as ONE kernel launch: the "
+          "default backend fuses the filter statistics, the trust-weight "
+          "derivation and the WFAgg-E combine into a single-launch "
+          "Pallas kernel — ~1 candidate pass per round; see "
+          "src/repro/kernels/README.md.)")
 
     # Dynamic topology in 5 lines: the same experiment under node churn —
     # the graph (and each node's neighbor slate) changes EVERY round,

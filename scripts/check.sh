@@ -37,4 +37,9 @@ fi
 
 python benchmarks/agg_microbench.py --kernels --sizes 8x4096 \
   --bench-json "${BENCH_JSON:-}"
+
+# memory_passes() for the shipped configs must not exceed the traffic
+# table documented in src/repro/kernels/README.md (single-launch = ~1).
+python scripts/passes_gate.py
+
 echo "check.sh: OK"

@@ -1,0 +1,48 @@
+"""Memory-passes regression gate.
+
+``core.wfagg.memory_passes`` is the executable form of the traffic table
+in src/repro/kernels/README.md; this gate pins the shipped configs to
+the documented ceilings so a refactor cannot silently regress the
+candidate-pass count (e.g. the single-launch round falling back to two
+launches, or the indexed path regrowing a separate Gram pass).
+
+Run via ``scripts/check.sh`` (and as its own CI step):
+
+    PYTHONPATH=src python scripts/passes_gate.py
+"""
+from repro.core.wfagg import WFAggConfig, alt_wfagg_config, memory_passes
+
+# (description, cfg, memory_passes kwargs, documented ceiling)
+CHECKS = [
+    ("single-launch indexed gossip round (the default)",
+     WFAggConfig(), dict(include_gather=True, indexed=True), 1),
+    ("single-launch indexed Alt-WFAgg (Gram folded into the stats phase)",
+     alt_wfagg_config(), dict(include_gather=True, indexed=True), 1),
+    ("two-launch indexed fallback",
+     WFAggConfig(backend="fused_two_launch"),
+     dict(include_gather=True, indexed=True), 2),
+    ("fused single-node aggregation (stats + combine)",
+     WFAggConfig(), {}, 2),
+    ("fused single-node Alt-WFAgg (one extra Gram pass)",
+     alt_wfagg_config(), {}, 3),
+    ("fused gathered gossip round (gather + stats + combine)",
+     WFAggConfig(), dict(include_gather=True), 3),
+]
+
+
+def main() -> None:
+    failed = []
+    for desc, cfg, kwargs, ceiling in CHECKS:
+        got = memory_passes(cfg, **kwargs)
+        status = "ok" if got <= ceiling else "REGRESSION"
+        print(f"  {desc}: {got} (ceiling {ceiling}) {status}")
+        if got > ceiling:
+            failed.append(desc)
+    if failed:
+        raise SystemExit(
+            f"memory_passes regression vs the documented table: {failed}")
+    print("passes_gate: OK")
+
+
+if __name__ == "__main__":
+    main()

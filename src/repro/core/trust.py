@@ -1,0 +1,257 @@
+"""WFAgg trust-weight derivation from O(K) sufficient statistics.
+
+This is the scoring stage of WFAgg (Alg. 1 lines 9-22 + the valid-aware
+filter masks) factored out of ``core.wfagg`` so that it can run in TWO
+places off the exact same code:
+
+  * on the host, between the stats and combine kernel launches of the
+    two-launch fused path (``core.wfagg._wfagg_batch_indexed``), vmapped
+    over the N receiving nodes;
+  * INSIDE the single-launch round kernel
+    (``kernels.robust_stats.kernel._wfagg_round_indexed_kernel``), at the
+    phase boundary, on the VMEM-resident ``(1, K)`` accumulators of one
+    node — which is what lets the kernel derive the WFAgg-E weights and
+    combine without a host round-trip.
+
+Everything here is O(K)/O(K^2) plain-jnp logic on tiny arrays; the only
+import from the kernels package is the ``RobustStats`` container (pure
+data, no Pallas), so the kernel body can import this module without a
+cycle.  The WFAgg-T thresholds are NOT derived here — the EWMA bands
+depend on the (W, K) metric history, which lives outside the kernel, so
+callers precompute them with ``temporal_bands`` and the decision reduces
+to four compares against the kernel's own temporal statistics
+(bit-identical to ``wfagg_t_decide``'s in-band test).
+
+``cfg`` arguments are duck-typed ``core.wfagg.WFAggConfig`` instances,
+and ``stats`` arguments are duck-typed ``kernels.robust_stats.ref.
+RobustStats`` containers (read-only attribute access) — this module
+imports from NEITHER package, which is what keeps it importable from
+both sides (``core.wfagg`` and the kernel body) without a cycle.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg
+
+Array = jax.Array
+RobustStats = Any   # duck-typed: .dist2/.norm2/.cosine_to_median()/...
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# scoring + EWMA primitives (moved from core.wfagg; re-exported there)
+# ---------------------------------------------------------------------------
+
+def wfagg_scores(mask_d: Array, mask_c: Array, mask_t: Array, cfg) -> Array:
+    """Alg. 1 lines 9-22: tau-weighted filter votes with a 2-filter floor."""
+    w = (
+        cfg.tau1 * mask_d.astype(jnp.float32)
+        + cfg.tau2 * mask_c.astype(jnp.float32)
+        + cfg.tau3 * mask_t.astype(jnp.float32)
+    )
+    return jnp.where(w < cfg.accept_threshold - 1e-9, 0.0, w)
+
+
+def ewma_mean_std(hist: Array, count: Array, decay: float) -> Tuple[Array, Array]:
+    """Exponentially weighted mean/std over a ring buffer hist (W, K).
+
+    hist[0] is the most recent entry.  Entries beyond ``count`` are masked.
+    """
+    W = hist.shape[0]
+    ages = jnp.arange(W, dtype=jnp.float32)
+    valid = ages < count.astype(jnp.float32)
+    w = jnp.where(valid, decay ** ages, 0.0)
+    w = w / jnp.maximum(w.sum(), _EPS)
+    mu = jnp.einsum("w,wk->k", w, hist)
+    var = jnp.einsum("w,wk->k", w, (hist - mu[None, :]) ** 2)
+    return mu, jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def push_history(hist_s: Array, hist_b: Array, count: Array, t: Array,
+                 s_t: Array, b_t: Array) -> Tuple[Array, Array, Array, Array]:
+    """WFAgg-T ring-buffer advance (most recent at index 0, count capped
+    at the window) — the state half of the Alg. 4 decision, single-
+    sourced so every backend updates the history identically."""
+    hist_s = jnp.roll(hist_s, 1, axis=0).at[0].set(s_t)
+    hist_b = jnp.roll(hist_b, 1, axis=0).at[0].set(b_t)
+    return hist_s, hist_b, jnp.minimum(count + 1, hist_s.shape[0]), t + 1
+
+
+def temporal_bands(hist_s: Array, hist_b: Array, count: Array, t: Array,
+                   cfg) -> Array:
+    """Precompute the WFAgg-T acceptance bands as a FLAT (4K,) vector
+    ``[lo_d | hi_d | lo_c | hi_c]`` (the kernel reshapes to (4, K)).
+
+    Encodes ``wfagg_t_decide``'s whole decision: a candidate passes iff
+    ``lo_d <= s_t <= hi_d`` and ``lo_c <= b_t <= hi_c``.  The transient /
+    empty-history gate folds into the bands themselves — inactive rounds
+    get ``(+inf, -inf)`` bands no finite metric can satisfy — so the
+    in-kernel test is four compares with no extra flag input.  The band
+    edges are the exact ``mu -/+ sd`` expressions of the decision core,
+    so masks agree bit-for-bit with the host path.  (Flat rather than
+    (4, K): the vmapped per-node bands must not materialize any 3-D
+    O(K)-sized buffer — the round's (N, K, d)-free HLO assertions grep
+    by rank, and K can collide with the literal 4.)
+    """
+    mu_d, sd_d = ewma_mean_std(hist_s, count, cfg.ewma_decay)
+    mu_c, sd_c = ewma_mean_std(hist_b, count, cfg.ewma_decay)
+    active = (t > cfg.transient) & (count > 0)
+    inf = jnp.float32(jnp.inf)
+    return jnp.concatenate([
+        jnp.where(active, mu_d - sd_d, inf),
+        jnp.where(active, mu_d + sd_d, -inf),
+        jnp.where(active, mu_c - sd_c, inf),
+        jnp.where(active, mu_c + sd_c, -inf),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Gram expansions
+# ---------------------------------------------------------------------------
+
+def sq_dists_from_gram(gram: Array, norm2: Array) -> Array:
+    """(K, K) squared distances from a Gram matrix + squared norms."""
+    d2 = norm2[..., :, None] + norm2[..., None, :] - 2.0 * gram
+    K = gram.shape[-1]
+    d2 = d2 * (1.0 - jnp.eye(K, dtype=d2.dtype))
+    return jnp.maximum(d2, 0.0)
+
+
+def cosine_dist_from_gram(gram: Array, norm2: Array) -> Array:
+    """(K, K) cosine distance matrix from a Gram matrix + squared norms."""
+    n = jnp.sqrt(jnp.maximum(norm2, _EPS))
+    return 1.0 - gram / jnp.maximum(n[..., :, None] * n[..., None, :], _EPS)
+
+
+def needs_gram(cfg) -> bool:
+    """True when an Alt-WFAgg filter consumes the (K, K) candidate Gram."""
+    return cfg.distance_filter == "multi_krum" or cfg.similarity_filter == "clustering"
+
+
+# ---------------------------------------------------------------------------
+# filter masks from sufficient statistics (single node, (K,)-shaped)
+# ---------------------------------------------------------------------------
+
+def fused_distance_mask(stats: RobustStats, gram: Optional[Array],
+                        cfg) -> Array:
+    K = stats.dist2.shape[-1]
+    if cfg.distance_filter == "wfagg_d":
+        return agg.smallest_k_mask(stats.dist2, K - int(cfg.f) - 1)
+    if cfg.distance_filter == "multi_krum":
+        scores = agg.krum_scores_from_sq_dists(
+            sq_dists_from_gram(gram, stats.norm2), cfg.f)
+        m = cfg.multi_krum_m or max(1, K // 4)
+        return agg.smallest_k_mask(scores, m)
+    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
+
+
+def fused_similarity_mask(stats: RobustStats, gram: Optional[Array],
+                          cfg) -> Array:
+    K = stats.dist2.shape[-1]
+    if cfg.similarity_filter == "wfagg_c":
+        # cosine to the median model is invariant to the norm clipping of
+        # Alg. 3, so the fused filter ranks the kernel's dot/norm stats
+        # directly — same selection as wfagg_c_select.
+        return agg.smallest_k_mask(stats.cosine_to_median(), K - int(cfg.f) - 1)
+    if cfg.similarity_filter == "clustering":
+        return agg.clustering_select_from_dist(
+            cosine_dist_from_gram(gram, stats.norm2))
+    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+
+
+def fused_distance_mask_valid(stats: RobustStats, gram: Optional[Array],
+                              valid: Array, cfg) -> Array:
+    """Valid-aware distance mask for one node of a padded (irregular)
+    slate: keep counts scale with the node's TRUE degree v (traced), and
+    padded slots score +inf so they can never be selected.  Bit-identical
+    to ``fused_distance_mask`` when every slot is valid."""
+    K = stats.dist2.shape[-1]
+    v = valid.sum()
+    if cfg.distance_filter == "wfagg_d":
+        scores = jnp.where(valid, stats.dist2, jnp.inf)
+        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
+    if cfg.distance_filter == "multi_krum":
+        d2 = sq_dists_from_gram(gram, stats.norm2)
+        vpair = valid[:, None] & valid[None, :]
+        scores = agg.krum_scores_from_sq_dists_dyn(
+            jnp.where(vpair, d2, jnp.inf), cfg.f, v)
+        m = cfg.multi_krum_m or max(1, K // 4)
+        return agg.smallest_k_mask_dyn(
+            jnp.where(valid, scores, jnp.inf), jnp.minimum(m, v))
+    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
+
+
+def fused_similarity_mask_valid(stats: RobustStats, gram: Optional[Array],
+                                valid: Array, cfg) -> Array:
+    """Valid-aware similarity mask (see ``fused_distance_mask_valid``)."""
+    v = valid.sum()
+    if cfg.similarity_filter == "wfagg_c":
+        scores = jnp.where(valid, stats.cosine_to_median(), jnp.inf)
+        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
+    if cfg.similarity_filter == "clustering":
+        return agg.clustering_select_from_dist_dyn(
+            cosine_dist_from_gram(gram, stats.norm2), valid)
+    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+
+
+# ---------------------------------------------------------------------------
+# the full scoring stage: stats -> (masks, trust weights, combine coeffs)
+# ---------------------------------------------------------------------------
+
+def derive_trust_weights(
+    stats: RobustStats,
+    gram: Optional[Array],
+    valid: Array,          # (K,) float32, 1.0 on real edges
+    tbands: Optional[Array],   # (4, K) from temporal_bands, or None
+    cfg,
+) -> Tuple[Array, Array, Array, Array]:
+    """One node's WFAgg scoring stage: (mask_d, mask_c, mask_t, weights).
+
+    Pure O(K)/O(K^2) logic on the sufficient statistics — THE shared code
+    between the host path and the in-kernel phase boundary.  ``weights``
+    already carries the valid mask (padded slots weigh 0), so a degree-0
+    node scores an all-zero vector and the combine falls back to its
+    local model.
+    """
+    valid_b = valid.astype(bool)
+    mask_d = fused_distance_mask_valid(stats, gram, valid_b, cfg)
+    mask_c = fused_similarity_mask_valid(stats, gram, valid_b, cfg)
+    if tbands is None:
+        mask_t = jnp.zeros(valid_b.shape, dtype=bool)
+    else:
+        s_t = stats.prev_dist2
+        b_t = stats.cosine_to_prev()
+        mask_t = ((s_t >= tbands[0]) & (s_t <= tbands[1])
+                  & (b_t >= tbands[2]) & (b_t <= tbands[3]) & valid_b)
+    weights = wfagg_scores(mask_d, mask_c, mask_t, cfg) * valid.astype(jnp.float32)
+    return mask_d, mask_c, mask_t, weights
+
+
+def combine_coefficients(weights: Array, alpha: float, valid: Array,
+                         mean_fallback: bool) -> Tuple[Array, Array]:
+    """Normalize trust weights into the WFAgg-E combine coefficients:
+    returns ``(alpha_eff * w_norm (K,), 1 - alpha_eff ())``, matching the
+    host-side preparation of the two-launch combine kernel bit-for-bit.
+
+    ``mean_fallback=True`` is the mode-B (robust all-reduce) convention:
+    when every candidate is rejected the combine degrades to the uniform
+    mean of the VALID candidates (there is no meaningful "local" model on
+    a gradient all-reduce); False is the DFL/Eq. 3 convention — the node
+    keeps its local model.
+    """
+    wsum = weights.sum()
+    w_norm = weights / jnp.maximum(wsum, _EPS)
+    if mean_fallback:
+        vsum = valid.sum()
+        uniform = valid / jnp.maximum(vsum, 1.0)
+        w_norm = jnp.where(wsum > 0, w_norm, uniform)
+        # an all-invalid (degree-0) slate has no mean to fall back to
+        # either: keep the local anchor rather than emitting zeros
+        eff_alpha = jnp.where(vsum > 0, alpha, 0.0).astype(jnp.float32)
+    else:
+        eff_alpha = jnp.where(wsum > 0, alpha, 0.0).astype(jnp.float32)
+    return eff_alpha * w_norm, 1.0 - eff_alpha

@@ -17,13 +17,21 @@ training step.
 
 Execution backends (``WFAggConfig.backend``):
   reference  the plain-jnp pipeline above — each filter reads the (K, d)
-             candidate matrix again (~7 full passes per aggregation)
-  fused      one ``robust_stats`` Pallas launch computes every filter
-             statistic in a single read of the candidates (+ one read of
-             the previous round for WFAgg-T); only O(K)/O(K^2) logic runs
-             in plain jnp, and the WFAgg-E combine is the second and last
-             (K, d)-sized pass.  ``wfagg_batch`` extends this to all N
-             nodes of a gossip round in one kernel launch.
+             candidate matrix again (~7 full passes per aggregation).
+             With a ``valid`` mask it runs the valid-aware dynamic-count
+             variant (the oracle for irregular/dynamic topologies).
+  fused      the Pallas path.  On the gather-free indexed batch entry
+             this is the SINGLE-LAUNCH round kernel: one pallas_call
+             streams the neighbor blocks, accumulates every filter
+             statistic, derives the WFAgg-E trust weights at an
+             in-kernel phase boundary (``core.trust``), and writes the
+             trust-weighted combine — ~1 candidate pass per round.  On
+             single-node / gathered entries it is the stats-kernel +
+             host-scoring + combine pipeline (2 passes).
+  fused_two_launch
+             forces the two-launch shape on the indexed entry as well
+             (stats launch, host scoring, combine launch) — the parity
+             fallback for validating the single-launch kernel.
 """
 from __future__ import annotations
 
@@ -34,14 +42,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators as agg
+from repro.core import trust
 from repro.kernels.pairwise_dist.ops import pairwise_gram
 from repro.kernels.robust_stats.ops import (
-    robust_stats, robust_stats_batch, robust_stats_indexed)
-from repro.kernels.robust_stats.ref import RobustStats
+    robust_stats, robust_stats_batch, robust_stats_indexed,
+    wfagg_round_indexed)
+from repro.kernels.robust_stats.ref import RobustStats, robust_stats_indexed_ref
 from repro.kernels.weighted_agg.ops import weighted_agg, weighted_agg_indexed
 
 Array = jax.Array
 _EPS = 1e-12
+
+# Fused execution backends: "fused" routes the gather-free indexed path
+# through the SINGLE-LAUNCH round kernel (stats + in-kernel weight
+# derivation + combine in one pallas_call); "fused_two_launch" keeps the
+# separate stats and combine launches with the scoring stage on the host
+# — the parity fallback (and the shape every non-indexed fused entry
+# still uses, where no single-launch op exists).
+_FUSED_BACKENDS = ("fused", "fused_two_launch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +79,11 @@ class WFAggConfig:
     distance_filter: str = "wfagg_d"     # or "multi_krum"
     similarity_filter: str = "wfagg_c"   # or "clustering"
     multi_krum_m: Optional[int] = None   # Multi-Krum m (default K//4)
-    # Execution backend: "fused" (single-pass Pallas filter bank) or
-    # "reference" (plain-jnp multi-pass pipeline).  Same masks/aggregate
-    # up to float tolerance; see memory_passes() for the traffic model.
+    # Execution backend: "fused" (Pallas filter bank; the gather-free
+    # indexed batch runs the SINGLE-LAUNCH round kernel),
+    # "fused_two_launch" (separate stats + combine launches — parity
+    # fallback), or "reference" (plain-jnp multi-pass pipeline).  Same
+    # masks/aggregate up to float tolerance; see memory_passes().
     backend: str = "fused"
 
     @property
@@ -136,19 +156,9 @@ def wfagg_c_select(updates: Array, f: int) -> Array:
     return agg.smallest_k_mask(alpha_j, K - int(f) - 1)
 
 
-def _ewma_mean_std(hist: Array, count: Array, decay: float) -> Tuple[Array, Array]:
-    """Exponentially weighted mean/std over a ring buffer hist (W, K).
-
-    hist[0] is the most recent entry.  Entries beyond ``count`` are masked.
-    """
-    W = hist.shape[0]
-    ages = jnp.arange(W, dtype=jnp.float32)
-    valid = ages < count.astype(jnp.float32)
-    w = jnp.where(valid, decay ** ages, 0.0)
-    w = w / jnp.maximum(w.sum(), _EPS)
-    mu = jnp.einsum("w,wk->k", w, hist)
-    var = jnp.einsum("w,wk->k", w, (hist - mu[None, :]) ** 2)
-    return mu, jnp.sqrt(jnp.maximum(var, 0.0))
+# EWMA over a (W, K) ring buffer — single-sourced in core.trust (the
+# single-launch kernel's band precomputation shares it).
+_ewma_mean_std = trust.ewma_mean_std
 
 
 def wfagg_t_decide(hist_s: Array, hist_b: Array, count: Array, t: Array,
@@ -166,11 +176,7 @@ def wfagg_t_decide(hist_s: Array, hist_b: Array, count: Array, t: Array,
     in_c = (b_t >= mu_c - sd_c) & (b_t <= mu_c + sd_c)
     active = (t > cfg.transient) & (count > 0)
     mask = jnp.where(active, in_d & in_c, jnp.zeros_like(in_d))
-
-    # Ring-buffer push (most recent at index 0).
-    hist_s = jnp.roll(hist_s, 1, axis=0).at[0].set(s_t)
-    hist_b = jnp.roll(hist_b, 1, axis=0).at[0].set(b_t)
-    return mask, hist_s, hist_b, jnp.minimum(count + 1, hist_s.shape[0]), t + 1
+    return (mask, *trust.push_history(hist_s, hist_b, count, t, s_t, b_t))
 
 
 def wfagg_t_select(state: TemporalState, updates: Array, cfg: WFAggConfig) -> Tuple[Array, TemporalState]:
@@ -204,14 +210,9 @@ def wfagg_t_select(state: TemporalState, updates: Array, cfg: WFAggConfig) -> Tu
 # Scoring + aggregation
 # ---------------------------------------------------------------------------
 
-def wfagg_scores(mask_d: Array, mask_c: Array, mask_t: Array, cfg: WFAggConfig) -> Array:
-    """Alg. 1 lines 9-22: tau-weighted filter votes with a 2-filter floor."""
-    w = (
-        cfg.tau1 * mask_d.astype(jnp.float32)
-        + cfg.tau2 * mask_c.astype(jnp.float32)
-        + cfg.tau3 * mask_t.astype(jnp.float32)
-    )
-    return jnp.where(w < cfg.accept_threshold - 1e-9, 0.0, w)
+# Alg. 1 lines 9-22 scoring — single-sourced in core.trust so the
+# in-kernel weight derivation of the single-launch round runs it too.
+wfagg_scores = trust.wfagg_scores
 
 
 def wfagg_e(local: Array, updates: Array, weights: Array, alpha: float) -> Array:
@@ -249,85 +250,18 @@ def _similarity_mask(updates: Array, cfg: WFAggConfig) -> Array:
 # ---------------------------------------------------------------------------
 # fused backend: one-pass filter bank on the robust_stats Pallas kernel
 # ---------------------------------------------------------------------------
+# The mask derivations live in ``core.trust`` — pure O(K)/O(K^2) logic on
+# the kernel's sufficient statistics, shared verbatim with the in-kernel
+# phase boundary of the single-launch round (the aliases keep this
+# module's historical private names working).
 
-def _sq_dists_from_gram(gram: Array, norm2: Array) -> Array:
-    """(K, K) squared distances from a Gram matrix + squared norms."""
-    d2 = norm2[..., :, None] + norm2[..., None, :] - 2.0 * gram
-    K = gram.shape[-1]
-    d2 = d2 * (1.0 - jnp.eye(K, dtype=d2.dtype))
-    return jnp.maximum(d2, 0.0)
-
-
-def _cosine_dist_from_gram(gram: Array, norm2: Array) -> Array:
-    """(K, K) cosine distance matrix from a Gram matrix + squared norms."""
-    n = jnp.sqrt(jnp.maximum(norm2, _EPS))
-    return 1.0 - gram / jnp.maximum(n[..., :, None] * n[..., None, :], _EPS)
-
-
-def _fused_distance_mask(stats: RobustStats, gram: Optional[Array],
-                         cfg: WFAggConfig) -> Array:
-    K = stats.dist2.shape[-1]
-    if cfg.distance_filter == "wfagg_d":
-        return agg.smallest_k_mask(stats.dist2, K - int(cfg.f) - 1)
-    if cfg.distance_filter == "multi_krum":
-        scores = agg.krum_scores_from_sq_dists(
-            _sq_dists_from_gram(gram, stats.norm2), cfg.f)
-        m = cfg.multi_krum_m or max(1, K // 4)
-        return agg.smallest_k_mask(scores, m)
-    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
-
-
-def _fused_similarity_mask(stats: RobustStats, gram: Optional[Array],
-                           cfg: WFAggConfig) -> Array:
-    K = stats.dist2.shape[-1]
-    if cfg.similarity_filter == "wfagg_c":
-        # cosine to the median model is invariant to the norm clipping of
-        # Alg. 3, so the fused filter ranks the kernel's dot/norm stats
-        # directly — same selection as wfagg_c_select.
-        return agg.smallest_k_mask(stats.cosine_to_median(), K - int(cfg.f) - 1)
-    if cfg.similarity_filter == "clustering":
-        return agg.clustering_select_from_dist(
-            _cosine_dist_from_gram(gram, stats.norm2))
-    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
-
-
-def _needs_gram(cfg: WFAggConfig) -> bool:
-    return cfg.distance_filter == "multi_krum" or cfg.similarity_filter == "clustering"
-
-
-def _fused_distance_mask_valid(stats: RobustStats, gram: Optional[Array],
-                               valid: Array, cfg: WFAggConfig) -> Array:
-    """Valid-aware distance mask for one node of a padded (irregular)
-    slate: keep counts scale with the node's TRUE degree v (traced), and
-    padded slots score +inf so they can never be selected.  Bit-identical
-    to ``_fused_distance_mask`` when every slot is valid."""
-    K = stats.dist2.shape[-1]
-    v = valid.sum()
-    if cfg.distance_filter == "wfagg_d":
-        scores = jnp.where(valid, stats.dist2, jnp.inf)
-        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
-    if cfg.distance_filter == "multi_krum":
-        d2 = _sq_dists_from_gram(gram, stats.norm2)
-        vpair = valid[:, None] & valid[None, :]
-        scores = agg.krum_scores_from_sq_dists_dyn(
-            jnp.where(vpair, d2, jnp.inf), cfg.f, v)
-        m = cfg.multi_krum_m or max(1, K // 4)
-        return agg.smallest_k_mask_dyn(
-            jnp.where(valid, scores, jnp.inf), jnp.minimum(m, v))
-    raise ValueError(f"unknown distance filter {cfg.distance_filter!r}")
-
-
-def _fused_similarity_mask_valid(stats: RobustStats, gram: Optional[Array],
-                                 valid: Array, cfg: WFAggConfig) -> Array:
-    """Valid-aware similarity mask (see ``_fused_distance_mask_valid``)."""
-    v = valid.sum()
-    if cfg.similarity_filter == "wfagg_c":
-        scores = jnp.where(valid, stats.cosine_to_median(), jnp.inf)
-        return agg.smallest_k_mask_dyn(scores, v - int(cfg.f) - 1)
-    if cfg.similarity_filter == "clustering":
-        return agg.clustering_select_from_dist_dyn(
-            _cosine_dist_from_gram(gram, stats.norm2), valid)
-    raise ValueError(f"unknown similarity filter {cfg.similarity_filter!r}")
+_sq_dists_from_gram = trust.sq_dists_from_gram
+_cosine_dist_from_gram = trust.cosine_dist_from_gram
+_fused_distance_mask = trust.fused_distance_mask
+_fused_similarity_mask = trust.fused_similarity_mask
+_fused_distance_mask_valid = trust.fused_distance_mask_valid
+_fused_similarity_mask_valid = trust.fused_similarity_mask_valid
+_needs_gram = trust.needs_gram
 
 
 def _wfagg_fused(
@@ -376,7 +310,9 @@ def wfagg(
     cfg: WFAggConfig,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Full WFAgg (Alg. 1).  Returns (aggregated, new_state, info)."""
-    if cfg.backend == "fused":
+    if cfg.backend in _FUSED_BACKENDS:
+        # single-node calls have no single-launch variant — both fused
+        # flavors run the stats-kernel + host-scoring + combine pipeline
         return _wfagg_fused(local, updates, state, cfg)
     if cfg.backend != "reference":
         raise ValueError(f"unknown backend {cfg.backend!r}")
@@ -420,11 +356,15 @@ def wfagg_batch(
     Gather-free path: with ``neighbor_idx (N, K)``, ``updates`` is the
     (M, d) MODEL MATRIX instead of a gathered tensor — the fused kernels
     DMA each neighbor's d-blocks straight from it, so the (N, K, d)
-    gossip tensor never exists in HBM.  ``valid (N, K)`` marks the real
-    edges of padded irregular topologies (None = regular); the temporal
-    ``prev`` state may be per-edge (N, K, d) or a previous-round model
-    matrix (M, d) read through the same index table (in which case the
-    new state stays a matrix and the round is (N, K, d)-free end to end).
+    gossip tensor never exists in HBM.  Under the default
+    backend="fused" this is ONE single-launch round kernel (stats,
+    in-kernel trust weights, WFAgg-E combine — ~1 candidate pass);
+    backend="fused_two_launch" keeps the stats + combine launch pair.
+    ``valid (N, K)`` marks the real edges of padded irregular topologies
+    (None = regular); the temporal ``prev`` state may be per-edge
+    (N, K, d) or a previous-round model matrix (M, d) read through the
+    same index table (in which case the new state stays a matrix and the
+    round is (N, K, d)-free end to end).
     """
     if neighbor_idx is not None:
         return _wfagg_batch_indexed(local, updates, state, cfg,
@@ -438,7 +378,7 @@ def wfagg_batch(
         out, _, info = jax.vmap(lambda l, u: wfagg(l, u, None, cfg))(
             local, updates)
         return out, None, info
-    if cfg.backend != "fused":
+    if cfg.backend not in _FUSED_BACKENDS:
         raise ValueError(f"unknown backend {cfg.backend!r}")
 
     N, K, _ = updates.shape
@@ -480,46 +420,21 @@ def wfagg_batch(
     return out, new_state, info
 
 
-def _wfagg_batch_indexed(
-    local: Array,
-    models: Array,
+def _indexed_scoring(
+    stats: RobustStats,
+    valid_b: Array,
     state: Optional[TemporalState],
     cfg: WFAggConfig,
+    models: Array,
     neighbor_idx: Array,
-    valid: Optional[Array],
-) -> Tuple[Array, Optional[TemporalState], dict]:
-    """Gather-free batched WFAgg: neighbor-indexed stats + combine."""
-    N, K = neighbor_idx.shape
-    valid_b = jnp.ones((N, K), dtype=bool) if valid is None else valid.astype(bool)
+) -> Tuple[Array, Array, Array, Array, Optional[TemporalState]]:
+    """Host-side scoring stage shared by the two-launch fused path and
+    the valid-aware reference oracle: vmapped trust masks, the WFAgg-T
+    decision + ring-buffer update, and the tau-weighted scores.  Returns
+    (mask_d, mask_c, mask_t, weights, new_state)."""
+    N, K = valid_b.shape
     temporal = cfg.use_temporal and state is not None
     matrix_prev = temporal and state.prev.ndim == 2
-
-    if cfg.backend == "reference":
-        if valid is not None:
-            raise NotImplementedError(
-                "backend='reference' runs the static-count per-node pipeline "
-                "and cannot honor a padded valid mask; irregular topologies "
-                "need backend='fused'")
-        gathered = models[neighbor_idx]
-        if state is not None:
-            edge_state = (state._replace(prev=state.prev[neighbor_idx])
-                          if matrix_prev else state)
-            out, new_state, info = jax.vmap(
-                lambda l, u, s: wfagg(l, u, s, cfg))(local, gathered, edge_state)
-            if matrix_prev:
-                new_state = new_state._replace(prev=models)
-            return out, new_state, info
-        out, _, info = jax.vmap(lambda l, u: wfagg(l, u, None, cfg))(
-            local, gathered)
-        return out, None, info
-    if cfg.backend != "fused":
-        raise ValueError(f"unknown backend {cfg.backend!r}")
-
-    prev = state.prev if temporal else None
-    # the Alt-WFAgg (K, K) Gram rides along in the SAME kernel pass,
-    # accumulated from the resident candidate tile — no extra read
-    stats = robust_stats_indexed(models, neighbor_idx, valid, prev=prev,
-                                 need_gram=_needs_gram(cfg))
     gram = stats.gram
     stats = stats._replace(gram=None)  # keep the vmapped mask fns uniform
     if gram is not None:
@@ -545,9 +460,132 @@ def _wfagg_batch_indexed(
         mask_t = jnp.zeros((N, K), dtype=bool)
         new_state = state
     weights = wfagg_scores(mask_d, mask_c, mask_t, cfg) * valid_b
-    # gather-free WFAgg-E combine: neighbor rows DMA'd by the same table
-    out = weighted_agg_indexed(local, models, neighbor_idx, weights,
-                               alpha=cfg.alpha)
+    return mask_d, mask_c, mask_t, weights, new_state
+
+
+def _push_temporal_history(state: TemporalState, prev_new: Array,
+                           s_t: Array, b_t: Array) -> TemporalState:
+    """Batched WFAgg-T ring-buffer push (the state-update half of
+    ``wfagg_t_decide``): the single-launch path takes its masks from the
+    kernel, so only the history advance happens on the host."""
+    hist_s, hist_b, count, t = jax.vmap(trust.push_history)(
+        state.hist_s, state.hist_b, state.count, state.t, s_t, b_t)
+    return TemporalState(prev=prev_new, hist_s=hist_s, hist_b=hist_b,
+                         count=count, t=t)
+
+
+def _wfagg_batch_indexed(
+    local: Array,
+    models: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+    neighbor_idx: Array,
+    valid: Optional[Array],
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Gather-free batched WFAgg.
+
+    backend="fused" (default): ONE kernel launch per gossip round — the
+    round kernel streams neighbor blocks (phase 0), derives the trust
+    weights at the in-kernel phase boundary, and writes the WFAgg-E
+    combine (phase 1).  backend="fused_two_launch": the previous shape —
+    a stats launch, the scoring stage on the host, a combine launch —
+    kept as the parity fallback.  backend="reference": pure-jnp oracle;
+    with a ``valid`` mask it runs the valid-aware multi-pass pipeline
+    (same dynamic keep counts as the fused paths), without one it keeps
+    the bit-parity static-count per-node pipeline.
+    """
+    N, K = neighbor_idx.shape
+    valid_b = jnp.ones((N, K), dtype=bool) if valid is None else valid.astype(bool)
+    temporal = cfg.use_temporal and state is not None
+    matrix_prev = temporal and state.prev.ndim == 2
+    prev = state.prev if temporal else None
+
+    if cfg.backend == "reference":
+        if valid is not None:
+            return _wfagg_batch_indexed_reference_valid(
+                local, models, state, cfg, neighbor_idx, valid_b)
+        gathered = models[neighbor_idx]
+        if state is not None:
+            edge_state = (state._replace(prev=state.prev[neighbor_idx])
+                          if matrix_prev else state)
+            out, new_state, info = jax.vmap(
+                lambda l, u, s: wfagg(l, u, s, cfg))(local, gathered, edge_state)
+            if matrix_prev:
+                new_state = new_state._replace(prev=models)
+            return out, new_state, info
+        out, _, info = jax.vmap(lambda l, u: wfagg(l, u, None, cfg))(
+            local, gathered)
+        return out, None, info
+
+    if cfg.backend == "fused_two_launch":
+        # the Alt-WFAgg (K, K) Gram rides along in the SAME kernel pass,
+        # accumulated from the resident candidate tile — no extra read
+        stats = robust_stats_indexed(models, neighbor_idx, valid, prev=prev,
+                                     need_gram=_needs_gram(cfg))
+        mask_d, mask_c, mask_t, weights, new_state = _indexed_scoring(
+            stats, valid_b, state, cfg, models, neighbor_idx)
+        # gather-free WFAgg-E combine: neighbor rows DMA'd by the same table
+        out = weighted_agg_indexed(local, models, neighbor_idx, weights,
+                                   alpha=cfg.alpha)
+    elif cfg.backend == "fused":
+        # single launch: stats, in-kernel weight derivation AND combine in
+        # one pallas_call.  The WFAgg-T EWMA bands are the only O(K)
+        # precompute (they need the host-resident metric history); the
+        # ring buffers advance afterwards off the kernel's temporal tail.
+        tbands = None
+        if temporal:
+            tbands = jax.vmap(
+                lambda hs, hb, c, tt: trust.temporal_bands(hs, hb, c, tt, cfg)
+            )(state.hist_s, state.hist_b, state.count, state.t)
+        out, weights, mask_d, mask_c, mask_t, stats = wfagg_round_indexed(
+            local, models, neighbor_idx, valid, cfg, prev=prev, tbands=tbands)
+        new_state = state
+        if temporal:
+            new_state = _push_temporal_history(
+                state, models if matrix_prev else models[neighbor_idx],
+                stats.prev_dist2, stats.cosine_to_prev())
+    else:
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+
+    info = {
+        "mask_d": mask_d,
+        "mask_c": mask_c,
+        "mask_t": mask_t,
+        "valid": valid_b,
+        "weights": weights,
+        "n_accepted": (weights > 0).sum(axis=-1),
+    }
+    return out, new_state, info
+
+
+def _wfagg_batch_indexed_reference_valid(
+    local: Array,
+    models: Array,
+    state: Optional[TemporalState],
+    cfg: WFAggConfig,
+    neighbor_idx: Array,
+    valid_b: Array,
+) -> Tuple[Array, Optional[TemporalState], dict]:
+    """Valid-aware pure-jnp reference pipeline: the oracle for irregular
+    and dynamic (padded, possibly degree-0) topologies.
+
+    Statistics come from ``robust_stats_indexed_ref`` (plain gathered
+    einsums — no Pallas anywhere), the masks from the same dynamic-count
+    trust logic the fused paths use (so selections agree with the kernels
+    on the true per-node degree), and the combine is the vmapped Eq. 3.
+    Previously this configuration raised NotImplementedError, leaving
+    irregular/dynamic runs without a reference to diff against.
+    """
+    N, K = neighbor_idx.shape
+    temporal = cfg.use_temporal and state is not None
+    prev = state.prev if temporal else None
+    stats = robust_stats_indexed_ref(models, neighbor_idx, valid_b, prev,
+                                     need_gram=_needs_gram(cfg))
+    mask_d, mask_c, mask_t, weights, new_state = _indexed_scoring(
+        stats, valid_b, state, cfg, models, neighbor_idx)
+    gathered = models[neighbor_idx].astype(jnp.float32)
+    out = jax.vmap(lambda l, u, w: wfagg_e(l, u, w, cfg.alpha))(
+        local, gathered, weights)
     info = {
         "mask_d": mask_d,
         "mask_c": mask_c,
@@ -608,10 +646,21 @@ def memory_passes(cfg: WFAggConfig, include_gather: bool = False,
     materializes the tensor.  The indexed path also folds the Alt-WFAgg
     (K, K) Gram into the stats pass (accumulated off the resident tile),
     dropping the separate Gram pass as well.
+
+    On the indexed path, backend="fused" is the SINGLE-LAUNCH round
+    kernel: stats, in-kernel weight derivation and combine in one
+    pallas_call — ~1 candidate pass (the phase-1 combine re-walks the
+    neighbor blocks through the same index maps, but those are the tiles
+    the stats phase just made resident, so the streamed HBM traffic is
+    one candidate read whenever a node's (K, d) slab fits VMEM).
+    backend="fused_two_launch" keeps the separate stats + combine
+    launches (2 passes) for parity runs.
     """
     t = 1 if cfg.use_temporal else 0
     gather = 1 if (include_gather and not indexed) else 0
-    if cfg.backend == "fused":
+    if cfg.backend in _FUSED_BACKENDS:
+        if indexed and cfg.backend == "fused":
+            return 1 + gather      # single launch: one streamed read
         gram = 1 if (_needs_gram(cfg) and not indexed) else 0
         return 2 + gram + gather
     d_passes = 1 if cfg.distance_filter == "multi_krum" else 2

@@ -55,9 +55,13 @@ class DFLConfig:
     # Model-poisoning attack hyper-parameters (ALIE z_max, noise mu/sigma,
     # IPM eps) — routed through core.attacks.apply_matrix_attack.
     attack_params: atk.AttackConfig = atk.AttackConfig()
-    # WFAgg execution backend: "fused" runs the whole gossip round's
-    # aggregations through one robust_stats kernel launch (see
-    # core.wfagg.wfagg_batch); "reference" keeps the multi-pass jnp path.
+    # WFAgg execution backend: "fused" runs the whole gossip round —
+    # stats, in-kernel trust-weight derivation AND the WFAgg-E combine —
+    # through ONE single-launch Pallas kernel (see core.wfagg.wfagg_batch
+    # / kernels.robust_stats.ops.wfagg_round_indexed);
+    # "fused_two_launch" keeps the separate stats + combine launches
+    # (parity fallback); "reference" is the multi-pass jnp oracle (valid-
+    # aware, so irregular and dynamic topologies run under it too).
     wfagg_backend: str = "fused"
 
     def wfagg_config(self, use_temporal=True, backend: Optional[str] = None) -> wf.WFAggConfig:
@@ -276,11 +280,8 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
                 f"aggregator {cfg.aggregator!r} assumes a static regular "
                 "neighbor table; dynamic schedules run through the "
                 "wfagg/alt_wfagg gather-free path")
-        if cfg.wfagg_backend != "fused":
-            raise NotImplementedError(
-                "dynamic schedules need wfagg_backend='fused': the "
-                "reference pipeline uses static per-filter keep counts "
-                "and cannot honor a per-round valid mask")
+        # any wfagg backend works here: the fused paths AND the reference
+        # oracle all honor per-round valid masks (dynamic keep counts)
         return jax.jit(_make_round_core(cfg, data))
 
     neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K) padded

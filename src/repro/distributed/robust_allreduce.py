@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -38,10 +39,11 @@ import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk
+from repro.core import trust
 from repro.core.wfagg import (
     TemporalState, WFAggConfig, wfagg_scores, wfagg_t_decide, wfagg_t_select)
 from repro.kernels.pairwise_dist.ops import pairwise_gram
-from repro.kernels.robust_stats.ops import robust_stats
+from repro.kernels.robust_stats.ops import robust_stats, wfagg_round_indexed
 
 Array = jax.Array
 AxisNames = Union[str, Tuple[str, ...]]
@@ -71,12 +73,18 @@ class RobustAggConfig:
     layout: str = "flat"
     gather_dtype: Optional[str] = None   # e.g. "bfloat16": gather candidates
                                          # in low precision (stats stay f32)
-    # statistics backend for layout='stacked': "fused" computes every
-    # filter statistic (incl. exact WFAgg-T metrics) through the one-pass
-    # robust_stats Pallas kernel over the concatenated (K, P) candidates;
-    # "reference" keeps the per-leaf jnp loop.  The fused path assumes the
-    # candidates fit one process (mode-A scale / shard_map-manual regions);
-    # pure-GSPMD multi-pod sharding of the kernel is an open item.
+    # statistics backend for layout='stacked': "fused" runs the whole
+    # wfagg/alt_wfagg aggregation — statistics, in-kernel trust-weight
+    # derivation AND the weighted combine — through ONE single-launch
+    # Pallas kernel over the concatenated (K, P) candidates (falls back
+    # to the two-launch shape when gather_dtype quantization is on: the
+    # temporal metrics must stay full-precision while the D/C stats
+    # quantize, which one read cannot provide); "fused_two_launch"
+    # forces the separate stats launch + host scoring + jnp combine;
+    # "reference" keeps the per-leaf jnp loop.  The fused paths assume
+    # the candidates fit one process (mode-A scale / shard_map-manual
+    # regions); pure-GSPMD multi-pod sharding of the kernel is an open
+    # item.
     backend: str = "reference"
 
     @property
@@ -363,6 +371,35 @@ def _concat_candidates(tree: Any, dtype=None) -> Array:
     return jnp.concatenate(parts, axis=1)
 
 
+def _split_like(flat: Array, stacked: Any) -> Any:
+    """Inverse of ``_concat_candidates`` for one aggregated (P,) vector:
+    split it back into the stacked pytree's per-candidate leaf shapes
+    (each leaf drops its leading K axis) and dtypes."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    out, off = [], 0
+    for leaf in leaves:
+        shape = leaf.shape[1:]
+        n = math.prod(shape)
+        out.append(flat[off:off + n].reshape(shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _effective_wfagg_config(cfg: RobustAggConfig, K: int) -> WFAggConfig:
+    """Resolve the WFAggConfig the trust-derivation stage should see:
+    alt_wfagg swaps in the Multi-Krum/Clustering filters, and the
+    Multi-Krum m follows ``_weights_from_stats``'s preference order
+    (WFAggConfig.multi_krum_m, then RobustAggConfig's, then K // 4)."""
+    w = cfg.wfagg
+    if cfg.method == "alt_wfagg":
+        w = dataclasses.replace(w, distance_filter="multi_krum",
+                                similarity_filter="clustering")
+    if w.distance_filter == "multi_krum":
+        m = w.multi_krum_m or cfg.multi_krum_m or max(1, K // 4)
+        w = dataclasses.replace(w, multi_krum_m=m)
+    return w
+
+
 def _stacked_stats_fused(
     stacked: Any, cfg: RobustAggConfig, prev: Optional[Any] = None,
 ):
@@ -482,9 +519,18 @@ def robust_allreduce_stacked(
         return out, state, {"weights": jnp.ones((K,), jnp.float32),
                             "n_accepted": jnp.asarray(K)}
 
-    fused = cfg.backend == "fused"
+    fused = cfg.backend in ("fused", "fused_two_launch")
     temporal = (cfg.method in ("wfagg", "alt_wfagg") and cfg.wfagg.use_temporal
                 and state is not None)
+    # Single-launch route (backend="fused"): the whole wfagg/alt_wfagg
+    # aggregation — statistics, in-kernel weight derivation, weighted
+    # combine — in ONE round-kernel launch over the concatenated (K, P)
+    # candidates.  gather_dtype forces the two-launch shape instead: the
+    # temporal metrics must stay full-precision while the D/C statistics
+    # quantize, which a single candidate read cannot provide.
+    if (cfg.backend == "fused" and cfg.method in ("wfagg", "alt_wfagg")
+            and cfg.gather_dtype is None):
+        return _stacked_one_launch(stacked, cfg, state, temporal)
     # The temporal metrics are computed on FULL-precision candidates in
     # the reference path (gather_dtype only quantizes the D/C/Gram
     # statistics), so the fused kernel may only fold them into its pass
@@ -520,6 +566,53 @@ def robust_allreduce_stacked(
         lambda l: jnp.tensordot(w_norm, l.astype(jnp.float32),
                                 axes=(0, 0)).astype(l.dtype),
         stacked)
+    return out, new_state, info
+
+
+def _stacked_one_launch(
+    stacked: Any,
+    cfg: RobustAggConfig,
+    state: Optional[TreeAggState],
+    temporal: bool,
+) -> Tuple[Any, Optional[TreeAggState], Dict[str, Array]]:
+    """Single-launch stacked wfagg/alt_wfagg: one round-kernel call on
+    the concatenated (K, P) candidates does statistics + in-kernel trust
+    weights + the weighted combine (the N=1, all-valid, identity-table
+    instance of the DFL round kernel).
+
+    ``alpha=1.0`` + ``mean_fallback=True`` turn the kernel's WFAgg-E
+    combine into the all-reduce convention: the output is the
+    trust-weight-normalized mean of the candidates, degrading to the
+    uniform mean when every candidate is rejected (same fallback as the
+    reference path — a gradient all-reduce has no "local model" anchor).
+    """
+    leaves = jax.tree.leaves(stacked)
+    K = leaves[0].shape[0]
+    w = _effective_wfagg_config(cfg, K)
+    flat = _concat_candidates(stacked)               # (K, P) f32
+    nidx = jnp.arange(K, dtype=jnp.int32)[None, :]   # identity slate
+    prev = tbands = None
+    if temporal:
+        prev = _concat_candidates(state.prev)        # (K, P) matrix form
+        tbands = trust.temporal_bands(state.hist_s, state.hist_b,
+                                      state.count, state.t, w)[None]
+    local = jnp.zeros_like(flat[:1])                 # unused: lcoef = 0
+    out_flat, weights, mask_d, mask_c, mask_t, kstats = wfagg_round_indexed(
+        local, flat, nidx, None, w, prev=prev, tbands=tbands,
+        alpha=1.0, mean_fallback=True)
+    new_state = state
+    if temporal:
+        hist_s, hist_b, count, t = trust.push_history(
+            state.hist_s, state.hist_b, state.count, state.t,
+            kstats.prev_dist2[0], kstats.cosine_to_prev()[0])
+        new_state = TreeAggState(
+            prev=jax.tree.map(lambda g: g.astype(jnp.float32), stacked),
+            hist_s=hist_s, hist_b=hist_b, count=count, t=t)
+    out = _split_like(out_flat[0], stacked)
+    info = {
+        "mask_d": mask_d[0], "mask_c": mask_c[0], "mask_t": mask_t[0],
+        "weights": weights[0], "n_accepted": (weights[0] > 0).sum(),
+    }
     return out, new_state, info
 
 

@@ -14,7 +14,8 @@ Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
 wrapper) and ref.py (pure-jnp oracle); validated with interpret=True.
 """
 from repro.kernels.common import default_interpret, resolve_interpret
-from repro.kernels.robust_stats.ops import robust_stats, robust_stats_batch
+from repro.kernels.robust_stats.ops import (
+    robust_stats, robust_stats_batch, wfagg_round_indexed)
 from repro.kernels.robust_stats.ref import RobustStats, robust_stats_ref
 from repro.kernels.pairwise_dist.ops import pairwise_gram
 from repro.kernels.pairwise_dist.ops import pairwise_sq_dists as pairwise_sq_dists_kernel

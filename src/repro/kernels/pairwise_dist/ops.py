@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import auto_block_d, resolve_interpret
+from repro.kernels.common import pad_d, resolve_block_d
 from repro.kernels.pairwise_dist.kernel import pairwise_pallas
 from repro.kernels.pairwise_dist.ref import pairwise_dist_ref
 
@@ -30,11 +30,8 @@ def pairwise_gram(
         gram = u @ u.T
         return gram, jnp.sum(u * u, axis=-1)
     K, D = updates.shape
-    interpret = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(D, interpret)
-    pad = (-D) % block_d
-    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    block_d, interpret = resolve_block_d(D, block_d, interpret)
+    u = pad_d(updates, block_d)
     gram, norm2 = pairwise_pallas(u, block_d=block_d, interpret=interpret)
     return gram, norm2[0]
 

@@ -34,6 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import resolve_interpret
+from repro.kernels.robust_stats.ref import RobustStats
 
 Array = jax.Array
 
@@ -46,6 +47,24 @@ def sort_rows(x: Array) -> Array:
             a, b = x[i], x[i + 1]
             x = x.at[i].set(jnp.minimum(a, b)).at[i + 1].set(jnp.maximum(a, b))
     return x
+
+
+def _valid_median(u: Array, vcol: Array) -> Array:
+    """Valid-masked median of a resident (K, T) tile: invalid rows sort
+    to +inf, the two dynamic middles of the v valid rows are one-hot
+    selected, and the degree-0 guard zeroes the empty median (an
+    all-invalid row would otherwise pick +inf and 0 * inf would poison
+    dotmed with NaNs).  Zero is the safe empty median: every accumulated
+    statistic stays finite and the caller's valid mask rejects all slots,
+    so the node keeps its local model."""
+    K = u.shape[0]
+    srt = sort_rows(jnp.where(vcol, u, jnp.inf))
+    v = jnp.sum(vcol.astype(jnp.int32))
+    lo, hi = (v - 1) // 2, v // 2                        # dynamic middles
+    kar = jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)
+    med = 0.5 * (jnp.sum(jnp.where(kar == lo, srt, 0.0), axis=0)
+                 + jnp.sum(jnp.where(kar == hi, srt, 0.0), axis=0))
+    return jnp.where(v > 0, med, jnp.zeros_like(med))
 
 
 def _robust_stats_kernel(*refs, n_trim: int, has_prev: bool,
@@ -215,18 +234,7 @@ def _robust_stats_indexed_kernel(*refs, K: int, has_prev: bool,
     def _flush():
         u = scratch_u[...]                                   # (K, T)
         vcol = valid_ref[...].reshape(K, 1) > 0.0            # (K, 1)
-        srt = sort_rows(jnp.where(vcol, u, jnp.inf))
-        v = jnp.sum(vcol.astype(jnp.int32))
-        lo, hi = (v - 1) // 2, v // 2                        # dynamic middles
-        kar = jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)
-        med = 0.5 * (jnp.sum(jnp.where(kar == lo, srt, 0.0), axis=0)
-                     + jnp.sum(jnp.where(kar == hi, srt, 0.0), axis=0))
-        # Degree-0 guard: an all-invalid row (fully churned-out node) has
-        # no middle element — the one-hot picks +inf and 0 * inf would
-        # poison dotmed with NaNs.  Zero is the safe empty median: every
-        # accumulated statistic stays finite and the caller's valid mask
-        # rejects all slots, so the node keeps its local model.
-        med = jnp.where(v > 0, med, jnp.zeros_like(med))
+        med = _valid_median(u, vcol)        # degree-0 guard: empty median = 0
 
         diff = u - med[None, :]
         p_dist2 = jnp.sum(diff * diff, axis=1)
@@ -324,6 +332,271 @@ def robust_stats_indexed_pallas(
     scratch_shapes = [pltpu.VMEM((K, block_d), jnp.float32)]
     if has_prev:
         scratch_shapes.append(pltpu.VMEM((K, block_d), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shapes),
+        interpret=resolve_interpret(interpret),
+    )(neighbor_idx.astype(jnp.int32), *args)
+
+
+def _wfagg_round_indexed_kernel(*refs, K: int, n_d: int, has_prev: bool,
+                                has_tbands: bool, need_gram: bool,
+                                cfg, alpha: float, mean_fallback: bool):
+    """Single-launch WFAgg round body: grid (node, PHASE, D block, slot).
+
+    Phase 0 is the indexed stats pass — each step DMAs one neighbor row
+    block via the scalar-prefetch index map into the (K, T) VMEM scratch
+    and flushes the D/C/T accumulators (and the Alt-WFAgg Gram) at the
+    last slot, exactly like ``_robust_stats_indexed_kernel``.  At the
+    phase boundary (last D block, last slot of phase 0) the WFAgg scoring
+    stage runs IN-KERNEL on the VMEM-resident (1, K) accumulators
+    (``core.trust.derive_trust_weights`` — the same code the two-launch
+    host path vmaps), the masks/weights are written to their O(K)
+    outputs, and the normalized combine coefficients land in a VMEM
+    scratch.  Phase 1 re-DMAs the neighbor blocks through the same index
+    map and accumulates the trust-weighted WFAgg-E combine into the
+    (1, T) output block — no host round-trip, no second kernel launch,
+    and the candidate re-read hits tiles that are still resident
+    whenever a node's (K, D) slab fits VMEM.
+
+    The WFAgg-T decision is four compares against the precomputed flat
+    (4K,) EWMA band input (``core.trust.temporal_bands`` — the history
+    lives outside the kernel); the ring-buffer push happens on the host
+    off the emitted temporal statistics.
+    """
+    # deferred import: core.wfagg -> robust_stats.ops -> this module at
+    # package-init time; by kernel-trace time repro.core is fully loaded
+    from repro.core import trust
+
+    idx_ref = refs[0]
+    del idx_ref
+    refs = list(refs[1:])
+    valid_ref = refs.pop(0)
+    tbands_ref = refs.pop(0) if has_tbands else None
+    local_ref = refs.pop(0)
+    u_ref = refs.pop(0)
+    prev_ref = refs.pop(0) if has_prev else None
+    out_ref, w_ref, md_ref, mc_ref, mt_ref = refs[:5]
+    n_acc = 4 + (1 if need_gram else 0) + (3 if has_prev else 0)
+    acc_refs = refs[5:5 + n_acc]
+    scratch = refs[5 + n_acc:]
+    dist2_ref, dotmed_ref, norm2_ref, mednorm2_ref = acc_refs[:4]
+    gram_ref = acc_refs[4] if need_gram else None
+    prev_acc = acc_refs[5 if need_gram else 4:] if has_prev else ()
+    scratch_u = scratch[0]
+    scratch_p = scratch[1] if has_prev else None
+    wcomb_ref, lcoef_ref = scratch[-2], scratch[-1]
+
+    # program ids read OUTSIDE pl.when bodies (0.4.x interpret rule)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    k = pl.program_id(3)
+    is_phase0 = p == 0
+    is_last_slot = k == K - 1
+    is_first_d = i == 0
+    is_boundary = is_phase0 & is_last_slot & (i == n_d - 1)
+
+    u_now = u_ref[...].astype(jnp.float32).reshape(1, -1)   # (1, T)
+
+    @pl.when(is_phase0)
+    def _stage():
+        scratch_u[k, :] = u_now[0]
+        if has_prev:
+            scratch_p[k, :] = prev_ref[...].reshape(
+                scratch_p.shape[1:]).astype(jnp.float32)
+
+    @pl.when(is_phase0 & is_last_slot)
+    def _flush():
+        u = scratch_u[...]                                   # (K, T)
+        vcol = valid_ref[...].reshape(K, 1) > 0.0
+        med = _valid_median(u, vcol)        # degree-0 guard: empty median = 0
+
+        diff = u - med[None, :]
+        p_dist2 = jnp.sum(diff * diff, axis=1)
+        p_dot = jnp.sum(u * med[None, :], axis=1)
+        p_norm2 = jnp.sum(u * u, axis=1)
+        p_med2 = jnp.sum(med * med)
+
+        @pl.when(is_first_d)
+        def _init():
+            for ref in acc_refs:
+                ref[...] = jnp.zeros_like(ref)
+
+        dist2_ref[...] += p_dist2.reshape(dist2_ref.shape)
+        dotmed_ref[...] += p_dot.reshape(dotmed_ref.shape)
+        norm2_ref[...] += p_norm2.reshape(norm2_ref.shape)
+        mednorm2_ref[...] += p_med2.reshape(mednorm2_ref.shape)
+
+        if need_gram:
+            g = jnp.dot(u, u.T, preferred_element_type=jnp.float32)
+            gram_ref[...] += g.reshape(gram_ref.shape)
+
+        if has_prev:
+            pdist2_ref, pdot_ref, pnorm2_ref = prev_acc
+            pv = scratch_p[...]
+            dprev = u - pv
+            pdist2_ref[...] += jnp.sum(dprev * dprev, axis=1).reshape(pdist2_ref.shape)
+            pdot_ref[...] += jnp.sum(u * pv, axis=1).reshape(pdot_ref.shape)
+            pnorm2_ref[...] += jnp.sum(pv * pv, axis=1).reshape(pnorm2_ref.shape)
+
+    @pl.when(is_boundary)
+    def _derive():
+        valid_f = valid_ref[...].reshape(K)
+        tail = [r[...].reshape(K) for r in prev_acc] if has_prev \
+            else [None, None, None]
+        stats = RobustStats(
+            med=None, trim=None,
+            dist2=dist2_ref[...].reshape(K),
+            dotmed=dotmed_ref[...].reshape(K),
+            norm2=norm2_ref[...].reshape(K),
+            mednorm2=jnp.reshape(mednorm2_ref[...], ()),
+            prev_dist2=tail[0], prev_dot=tail[1], prev_norm2=tail[2],
+        )
+        gram = gram_ref[...].reshape(K, K) if need_gram else None
+        tb = tbands_ref[...].reshape(4, K) if has_tbands else None
+        mask_d, mask_c, mask_t, w = trust.derive_trust_weights(
+            stats, gram, valid_f, tb, cfg)
+        md_ref[...] = mask_d.astype(jnp.float32).reshape(md_ref.shape)
+        mc_ref[...] = mask_c.astype(jnp.float32).reshape(mc_ref.shape)
+        mt_ref[...] = mask_t.astype(jnp.float32).reshape(mt_ref.shape)
+        w_ref[...] = w.reshape(w_ref.shape)
+        wcomb, lcoef = trust.combine_coefficients(w, alpha, valid_f,
+                                                  mean_fallback)
+        wcomb_ref[...] = wcomb.reshape(1, K)
+        lcoef_ref[...] = jnp.reshape(lcoef, (1, 1))
+
+    # ---- phase 1: trust-weighted combine (same DMA pattern, weights in
+    # VMEM from the boundary step; matches _weighted_agg_indexed_kernel) --
+    is_phase1 = jnp.logical_not(is_phase0)
+    kio = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+    @pl.when(is_phase1 & (k == 0))
+    def _seed():
+        wk = jnp.sum(jnp.where(kio == k, wcomb_ref[...], 0.0))
+        lc = lcoef_ref[0, 0]
+        out_ref[...] = (lc * local_ref[...].astype(jnp.float32)
+                        + wk * u_now).reshape(out_ref.shape)
+
+    @pl.when(is_phase1 & (k != 0))
+    def _accum():
+        wk = jnp.sum(jnp.where(kio == k, wcomb_ref[...], 0.0))
+        out_ref[...] += (wk * u_now).reshape(out_ref.shape)
+
+
+def wfagg_round_indexed_pallas(
+    local: Array,         # (N, D) local models (combine anchors)
+    models: Array,        # (M, D) model matrix (row per node)
+    neighbor_idx: Array,  # (N, K) int32 rows into ``models``
+    valid: Array,         # (N, K) float32, 1.0 on real edges
+    cfg,                  # duck-typed WFAggConfig (static)
+    prev: Array | None = None,    # (N, K, D) per-edge, or (M, D) matrix
+    tbands: Array | None = None,  # (N, 4K) flat WFAgg-T EWMA bands
+    *,
+    alpha: float,
+    mean_fallback: bool = False,
+    need_gram: bool = False,
+    block_d: int = 1024,
+    interpret: bool | None = None,
+):
+    """Launch the single-launch WFAgg round kernel over a 4-D
+    (node, phase, D block, slot) grid.  Phase 0 accumulates the indexed
+    robust statistics, the phase boundary derives the trust weights
+    in-kernel, and phase 1 writes the WFAgg-E combine — one launch for
+    the entire gossip round.
+
+    Returns (out (N, D), weights, mask_d, mask_c, mask_t (each (N, 1, K)),
+    dist2, dotmed, norm2 ((N, 1, K)), mednorm2 ((N, 1, 1))
+    [, gram (N, K, K)][, prev_dist2, prev_dot, prev_norm2 ((N, 1, K))]).
+    """
+    M, D = models.shape
+    N, K = neighbor_idx.shape
+    assert D % block_d == 0, (D, block_d)
+    assert local.shape == (N, D), (local.shape, (N, D))
+    n_d = D // block_d
+    has_prev = prev is not None
+    has_tbands = tbands is not None
+    prev_is_matrix = has_prev and prev.ndim == 2
+    grid = (N, 2, n_d, K)
+    kernel = functools.partial(
+        _wfagg_round_indexed_kernel, K=K, n_d=n_d, has_prev=has_prev,
+        has_tbands=has_tbands, need_gram=need_gram, cfg=cfg, alpha=alpha,
+        mean_fallback=mean_fallback,
+    )
+    k_spec = pl.BlockSpec((1, 1, K), lambda n, p, i, k, ir: (n, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, K), lambda n, p, i, k, ir: (n, 0)),        # valid
+    ]
+    args = [valid.astype(jnp.float32)]
+    if has_tbands:
+        # bands ride as a flat (N, 4K) 2-D input (kernel reshapes to
+        # (4, K)) — a 3-D (N, 4, K) buffer would false-positive the
+        # (N, K, d)-free HLO assertions whenever K == 4
+        assert tbands.shape == (N, 4 * K), (tbands.shape, (N, 4 * K))
+        in_specs.append(
+            pl.BlockSpec((1, 4 * K), lambda n, p, i, k, ir: (n, 0)))
+        args.append(tbands.astype(jnp.float32))
+    # local: pinned to block 0 during phase 0 (only phase 1 reads it) —
+    # `i * p` keeps the fetched block constant until the combine phase
+    in_specs.append(
+        pl.BlockSpec((1, block_d), lambda n, p, i, k, ir: (n, i * p)))
+    args.append(local)
+    in_specs.append(
+        pl.BlockSpec((1, block_d), lambda n, p, i, k, ir: (ir[n, k], i)))
+    args.append(models)
+    if has_prev:
+        # prev is only read in phase 0: pin the index map to one constant
+        # block during phase 1 so the re-walk fetches nothing new
+        if prev_is_matrix:
+            assert prev.shape == models.shape, (prev.shape, models.shape)
+            in_specs.append(pl.BlockSpec(
+                (1, block_d),
+                lambda n, p, i, k, ir: (ir[n, k * (1 - p)], i * (1 - p))))
+        else:
+            assert prev.shape == (N, K, D), (prev.shape, (N, K, D))
+            in_specs.append(pl.BlockSpec(
+                (1, 1, block_d),
+                lambda n, p, i, k, ir: (n, k * (1 - p), i * (1 - p))))
+        args.append(prev)
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((N, D), jnp.float32),      # combined models
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # trust weights
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # mask_d
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # mask_c
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # mask_t
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dist2
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # dotmed
+        jax.ShapeDtypeStruct((N, 1, K), jnp.float32),   # norm2
+        jax.ShapeDtypeStruct((N, 1, 1), jnp.float32),   # mednorm2
+    ]
+    out_specs = [
+        # the combine output is revisited at block 0 through phase 0 and
+        # only written in phase 1 (`i * p` pins it, like `local`)
+        pl.BlockSpec((1, block_d), lambda n, p, i, k, ir: (n, i * p)),
+        k_spec, k_spec, k_spec, k_spec,                  # weights + masks
+        k_spec, k_spec, k_spec,
+        pl.BlockSpec((1, 1, 1), lambda n, p, i, k, ir: (n, 0, 0)),
+    ]
+    if need_gram:
+        out_shapes.append(jax.ShapeDtypeStruct((N, K, K), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, K, K), lambda n, p, i, k, ir: (n, 0, 0)))
+    if has_prev:
+        out_shapes += [jax.ShapeDtypeStruct((N, 1, K), jnp.float32)] * 3
+        out_specs += [k_spec] * 3
+    scratch_shapes = [pltpu.VMEM((K, block_d), jnp.float32)]
+    if has_prev:
+        scratch_shapes.append(pltpu.VMEM((K, block_d), jnp.float32))
+    scratch_shapes += [pltpu.VMEM((1, K), jnp.float32),   # combine weights
+                       pltpu.VMEM((1, 1), jnp.float32)]   # local coefficient
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,

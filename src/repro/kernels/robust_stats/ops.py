@@ -21,11 +21,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import auto_block_d, resolve_interpret
+from repro.kernels.common import pad_d, resolve_block_d
 from repro.kernels.robust_stats.kernel import (
     robust_stats_batch_pallas,
     robust_stats_indexed_pallas,
     robust_stats_pallas,
+    wfagg_round_indexed_pallas,
 )
 from repro.kernels.robust_stats.ref import (
     RobustStats,
@@ -33,12 +34,6 @@ from repro.kernels.robust_stats.ref import (
     robust_stats_ref,
     trim_count,
 )
-
-
-def _pad_d(x: jax.Array, block_d: int) -> jax.Array:
-    pad = (-x.shape[-1]) % block_d
-    cfgpad = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-    return jnp.pad(x.astype(jnp.float32), cfgpad)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -66,11 +61,9 @@ def robust_stats(
         return robust_stats_ref(updates, beta, prev=prev)
     K, D = updates.shape
     n_trim = trim_count(K, beta)
-    itp = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(D, itp)
-    u = _pad_d(updates, block_d)
-    p = _pad_d(prev, block_d) if prev is not None else None
+    block_d, itp = resolve_block_d(D, block_d, interpret)
+    u = pad_d(updates, block_d)
+    p = pad_d(prev, block_d) if prev is not None else None
     outs = robust_stats_pallas(
         u, p, n_trim=n_trim, block_d=block_d, interpret=itp,
         emit_center=need_center,
@@ -129,11 +122,9 @@ def robust_stats_indexed(
         return robust_stats_indexed_ref(models, neighbor_idx, valid, prev,
                                         need_gram=need_gram)
     N, K = neighbor_idx.shape
-    itp = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(models.shape[-1], itp)
-    m = _pad_d(models, block_d)
-    p = _pad_d(prev, block_d) if prev is not None else None
+    block_d, itp = resolve_block_d(models.shape[-1], block_d, interpret)
+    m = pad_d(models, block_d)
+    p = pad_d(prev, block_d) if prev is not None else None
     v = (jnp.ones((N, K), jnp.float32) if valid is None
          else valid.astype(jnp.float32))
     outs = robust_stats_indexed_pallas(
@@ -182,11 +173,9 @@ def robust_stats_batch(
             lambda u: robust_stats_ref(u, beta))(updates)
     N, K, D = updates.shape
     n_trim = trim_count(K, beta)
-    itp = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(D, itp)
-    u = _pad_d(updates, block_d)
-    p = _pad_d(prev, block_d) if prev is not None else None
+    block_d, itp = resolve_block_d(D, block_d, interpret)
+    u = pad_d(updates, block_d)
+    p = pad_d(prev, block_d) if prev is not None else None
     outs = robust_stats_batch_pallas(
         u, p, n_trim=n_trim, block_d=block_d, interpret=itp,
         emit_center=need_center,
@@ -211,3 +200,88 @@ def robust_stats_batch(
         prev_dot=tail[1],
         prev_norm2=tail[2],
     )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "alpha", "mean_fallback", "block_d", "interpret"))
+def wfagg_round_indexed(
+    local: jax.Array,          # (N, d) combine anchors (local models)
+    models: jax.Array,         # (M, d) model matrix
+    neighbor_idx: jax.Array,   # (N, K) rows into models
+    valid: Optional[jax.Array],    # (N, K); None = all valid
+    cfg,                       # WFAggConfig (static; sets the filters)
+    prev: Optional[jax.Array] = None,    # (N, K, d) or (M, d) matrix
+    tbands: Optional[jax.Array] = None,  # (N, 4, K) WFAgg-T EWMA bands
+    alpha: Optional[float] = None,
+    mean_fallback: bool = False,
+    block_d: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """One-launch gossip round: the fused WFAgg-E combine folded into the
+    indexed robust_stats kernel (ROADMAP's "2 passes -> ~1").
+
+    A single 4-D (node, phase, D block, slot) Pallas launch streams the
+    neighbor blocks, accumulates every filter statistic, derives the
+    trust weights at the in-kernel phase boundary
+    (``core.trust.derive_trust_weights`` on the VMEM-resident (1, K)
+    accumulators — the Alt-WFAgg Gram included via the resident-tile
+    matmul), and writes the trust-weighted combine in phase 1.  The
+    WFAgg-T EWMA bands are precomputed from history by the caller
+    (``core.trust.temporal_bands``) and ride in as an O(K) input; the
+    in-kernel temporal decision is a compare against the kernel's own
+    prev_dist2 / cosine statistics.
+
+    Returns ``(out (N, d), weights (N, K), mask_d, mask_c, mask_t
+    ((N, K) bool), stats)`` where ``stats`` is a ``RobustStats`` with
+    (N, K)-shaped accumulators (the caller pushes the WFAgg-T ring
+    buffers from its temporal tail).  ``mean_fallback`` selects the
+    all-rejected behavior: local model (DFL, Eq. 3) vs uniform valid
+    mean (robust all-reduce).
+
+    Interpret-mode block policy: ONE D block (``interpret_blocks=1``) —
+    the interpreter carries the (N, d) combine output through every grid
+    step, so fewer/bigger steps beat smaller tiles; compiled TPU keeps
+    1024-lane tiles.
+    """
+    from repro.core import trust  # deferred: see kernel.py
+
+    N, K = neighbor_idx.shape
+    d = models.shape[-1]
+    if tbands is not None and prev is None:
+        raise ValueError(
+            "tbands requires prev: the in-kernel WFAgg-T band compare "
+            "reads the kernel's own prev_dist2/cosine temporal statistics")
+    if alpha is None:
+        alpha = cfg.alpha
+    block_d, itp = resolve_block_d(d, block_d, interpret, interpret_blocks=1)
+    m = pad_d(models, block_d)
+    loc = pad_d(local, block_d)
+    p = pad_d(prev, block_d) if prev is not None else None
+    v = (jnp.ones((N, K), jnp.float32) if valid is None
+         else valid.astype(jnp.float32))
+    # (N, 4, K) bands flatten to 2-D for the launch (no 3-D O(K) buffer
+    # may exist — the (N, K, d)-free HLO assertions grep by rank)
+    tb = tbands.reshape(N, 4 * K) if tbands is not None else None
+    outs = wfagg_round_indexed_pallas(
+        loc, m, neighbor_idx, v, cfg, p, tb,
+        alpha=float(alpha), mean_fallback=mean_fallback,
+        need_gram=trust.needs_gram(cfg), block_d=block_d, interpret=itp)
+    out = outs[0][:, :d]
+    weights = outs[1][:, 0, :]
+    mask_d, mask_c, mask_t = (o[:, 0, :] > 0.0 for o in outs[2:5])
+    dist2, dotmed, norm2, mednorm2 = outs[5:9]
+    rest = outs[9:]
+    gram = None
+    if trust.needs_gram(cfg):
+        gram, rest = rest[0], rest[1:]
+    tail = (None, None, None)
+    if prev is not None:
+        tail = tuple(o[:, 0, :] for o in rest)
+    stats = RobustStats(
+        med=None, trim=None,
+        dist2=dist2[:, 0, :], dotmed=dotmed[:, 0, :], norm2=norm2[:, 0, :],
+        mednorm2=mednorm2[:, 0, 0],
+        prev_dist2=tail[0], prev_dot=tail[1], prev_norm2=tail[2],
+        gram=gram,
+    )
+    return out, weights, mask_d, mask_c, mask_t, stats

@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import auto_block_d, resolve_interpret
+from repro.kernels.common import pad_d, resolve_block_d
 from repro.kernels.weighted_agg.kernel import (
     weighted_agg_indexed_pallas,
     weighted_agg_pallas,
@@ -29,15 +29,12 @@ def weighted_agg(
     if not use_kernel:
         return weighted_agg_ref(local, updates, weights, alpha)
     K, D = updates.shape
-    interpret = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(D, interpret)
+    block_d, interpret = resolve_block_d(D, block_d, interpret)
     wsum = weights.sum()
     w_norm = weights / jnp.maximum(wsum, 1e-12)
     eff_alpha = jnp.where(wsum > 0, alpha, 0.0)
-    pad = (-D) % block_d
-    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
-    loc = jnp.pad(local.astype(jnp.float32), (0, pad))[None, :]
+    u = pad_d(updates, block_d)
+    loc = pad_d(local, block_d)[None, :]
     out = weighted_agg_pallas(
         (eff_alpha * w_norm)[None, :].astype(jnp.float32),
         jnp.reshape(1.0 - eff_alpha, (1, 1)).astype(jnp.float32),
@@ -72,12 +69,9 @@ def weighted_agg_indexed(
         neighbor = jnp.einsum("nk,nkd->nd", w_norm, gathered)
         return (1.0 - eff_alpha)[:, None] * local + eff_alpha[:, None] * neighbor
     N, d = local.shape
-    interpret = resolve_interpret(interpret)
-    if block_d is None:
-        block_d = auto_block_d(d, interpret)
-    pad = (-d) % block_d
-    m = jnp.pad(models.astype(jnp.float32), ((0, 0), (0, pad)))
-    loc = jnp.pad(local.astype(jnp.float32), ((0, 0), (0, pad)))
+    block_d, interpret = resolve_block_d(d, block_d, interpret)
+    m = pad_d(models, block_d)
+    loc = pad_d(local, block_d)
     out = weighted_agg_indexed_pallas(
         (eff_alpha[:, None] * w_norm).astype(jnp.float32),
         (1.0 - eff_alpha)[:, None].astype(jnp.float32),

@@ -230,10 +230,13 @@ def test_dynamic_engine_rejects_unsupported_configs():
     topo = _topo()
     data = SyntheticImages()
     for bad in (DFLConfig(aggregator="median"),
-                DFLConfig(aggregator="wfagg", centralized=True),
-                DFLConfig(aggregator="wfagg", wfagg_backend="reference")):
+                DFLConfig(aggregator="wfagg", centralized=True)):
         with pytest.raises(NotImplementedError):
             build_round_fn(bad, topo, data, dynamic=True)
+    # the reference backend is no longer rejected: the valid-aware
+    # pure-jnp oracle honors per-round valid masks (dynamic keep counts)
+    build_round_fn(DFLConfig(aggregator="wfagg", wfagg_backend="reference"),
+                   topo, data, dynamic=True)
 
 
 def test_indexed_vs_reference_parity_under_churn():

@@ -1,0 +1,330 @@
+"""Single-launch gossip round: the fused WFAgg-E combine folded into the
+indexed robust_stats kernel (backend="fused") must reproduce the
+two-launch fallback (backend="fused_two_launch") and the valid-aware
+pure-jnp reference oracle — masks bit-equal, aggregates within fp32
+tolerance — across every dynamics scenario (including degree-0
+churned-out rows), irregular erdos_renyi-style degrees, both filter
+families, and the stacked (mode-B) layout; and the jitted round must
+lower to exactly ONE aggregation pallas_call with no (N, K, d) buffer."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wfagg as wf
+from repro.core.topology import make_topology
+from repro.data.synthetic import SyntheticImages
+from repro.dfl import dynamics as dyn
+from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
+
+ATOL = 3e-5
+BACKENDS = ("fused", "fused_two_launch", "reference")
+
+
+def _matrix_state(N, K, d, cfg):
+    """Matrix-prev temporal state (the engine's (N, K, d)-free layout)."""
+    return wf.TemporalState(
+        prev=jnp.zeros((N, d)),
+        hist_s=jnp.zeros((N, cfg.window, K)),
+        hist_b=jnp.zeros((N, cfg.window, K)),
+        count=jnp.zeros((N,), jnp.int32),
+        t=jnp.zeros((N,), jnp.int32))
+
+
+def _irregular(N, K, seed=0, min_degree=0):
+    """Padded (idx, valid) with per-node degrees in [min_degree, K]."""
+    rng = np.random.default_rng(seed)
+    idx = np.zeros((N, K), np.int32)
+    valid = np.zeros((N, K), bool)
+    for n in range(N):
+        v = int(rng.integers(min_degree, K + 1))
+        if v:
+            nbrs = rng.choice([i for i in range(N) if i != n], size=v,
+                              replace=False)
+            idx[n, :v] = nbrs
+        idx[n, v:] = n
+        valid[n, :v] = True
+    return jnp.asarray(idx), jnp.asarray(valid)
+
+
+# ---------------------------------------------------------------------------
+# parity across every dynamics scenario (single vs two-launch vs reference)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", dyn.SCENARIO_NAMES)
+def test_one_launch_parity_across_scenarios(scenario):
+    """Drive the schedule's round-varying slates through the gather-free
+    aggregation under all three backends, with live temporal state
+    re-keyed between rounds exactly like the engine: masks bit-equal,
+    aggregates within fp32 tolerance, degree-0 rows keep their local
+    model."""
+    topo = make_topology(n_nodes=10, degree=4, n_malicious=2, kind="ring",
+                         seed=0)
+    params = {"churn": {"p_leave": 0.45}}.get(scenario, {})
+    sched = dyn.make_schedule(scenario, topo, 3, seed=5, **params)
+    N, K, d = topo.n_nodes, sched.width, 192
+    cfgs = {b: wf.WFAggConfig(backend=b, transient=1, f=1) for b in BACKENDS}
+    states = {b: _matrix_state(N, K, d, c) for b, c in cfgs.items()}
+    prev_idx = jnp.asarray(sched.neighbor_idx[0])
+    prev_val = jnp.asarray(sched.valid[0])
+    saw_deg0 = False
+    for r in range(sched.rounds):
+        idx = jnp.asarray(sched.neighbor_idx[r])
+        val = jnp.asarray(sched.valid[r])
+        u = jax.random.normal(jax.random.PRNGKey(70 + r), (N, d)) + 0.3
+        outs, infos = {}, {}
+        for b, c in cfgs.items():
+            # re-key the slot-positional ring buffers to this round's
+            # slate by neighbor identity, exactly like the engine
+            st = wf.realign_temporal_history(states[b], prev_idx, prev_val,
+                                             idx, val)
+            outs[b], states[b], infos[b] = wf.wfagg_batch(
+                u, u, st, c, neighbor_idx=idx, valid=val)
+        prev_idx, prev_val = idx, val
+        for b in ("fused_two_launch", "reference"):
+            for m in ("mask_d", "mask_c", "mask_t"):
+                assert np.array_equal(np.asarray(infos["fused"][m]),
+                                      np.asarray(infos[b][m])), (r, b, m)
+            np.testing.assert_allclose(np.asarray(outs["fused"]),
+                                       np.asarray(outs[b]),
+                                       rtol=ATOL, atol=ATOL,
+                                       err_msg=f"{scenario} r{r} {b}")
+        deg0 = np.asarray(val).sum(axis=1) == 0
+        if deg0.any():
+            saw_deg0 = True
+            np.testing.assert_allclose(np.asarray(outs["fused"])[deg0],
+                                       np.asarray(u)[deg0],
+                                       rtol=1e-6, atol=1e-6)
+        assert np.isfinite(np.asarray(outs["fused"])).all()
+        assert states["fused"].prev.shape == (N, d)   # matrix state kept
+    if scenario == "churn":
+        assert saw_deg0, "churn schedule never produced a degree-0 node"
+
+
+@pytest.mark.parametrize("filters", ["wfagg", "alt"])
+def test_one_launch_irregular_parity(filters):
+    """erdos_renyi-style irregular padded slates, both filter families
+    (Alt-WFAgg exercises the in-kernel Gram + Multi-Krum/Clustering
+    derivation), temporal state live."""
+    N, K, d = 9, 5, 220
+    idx, val = _irregular(N, K, seed=8, min_degree=0)
+    assert (np.asarray(val).sum(1) == 0).any()   # a degree-0 row rides along
+    mk = wf.alt_wfagg_config if filters == "alt" else wf.WFAggConfig
+    cfgs = {b: mk(backend=b, transient=1, f=1,
+                  **({"multi_krum_m": 2} if filters == "alt" else {}))
+            for b in BACKENDS}
+    states = {b: _matrix_state(N, K, d, c) for b, c in cfgs.items()}
+    for r in range(4):
+        u = jax.random.normal(jax.random.PRNGKey(90 + r), (N, d)) + 0.2
+        outs, infos = {}, {}
+        for b, c in cfgs.items():
+            outs[b], states[b], infos[b] = wf.wfagg_batch(
+                u, u, states[b], c, neighbor_idx=idx, valid=val)
+        for b in ("fused_two_launch", "reference"):
+            for m in ("mask_d", "mask_c", "mask_t"):
+                assert np.array_equal(np.asarray(infos["fused"][m]),
+                                      np.asarray(infos[b][m])), (r, b, m)
+            np.testing.assert_allclose(np.asarray(outs["fused"]),
+                                       np.asarray(outs[b]),
+                                       rtol=ATOL, atol=ATOL)
+
+
+def test_one_launch_regular_matches_unmasked():
+    """valid=None (regular slate) runs the same single launch with an
+    implicit all-valid mask — must equal the explicit all-ones mask."""
+    N, K, d = 8, 4, 300
+    idx = jnp.asarray(
+        [[(n + o) % N for o in range(1, K + 1)] for n in range(N)], jnp.int32)
+    cfg = wf.WFAggConfig(backend="fused", use_temporal=False)
+    u = jax.random.normal(jax.random.PRNGKey(4), (N, d)) + 0.1
+    o1, _, i1 = wf.wfagg_batch(u, u, None, cfg, neighbor_idx=idx)
+    o2, _, i2 = wf.wfagg_batch(u, u, None, cfg, neighbor_idx=idx,
+                               valid=jnp.ones((N, K), bool))
+    assert np.array_equal(np.asarray(i1["mask_d"]), np.asarray(i2["mask_d"]))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_one_launch_multiblock_d_matches_single_block():
+    """Force n_d > 1 through the round op (interpret mode defaults to ONE
+    D block): the phase boundary fires on the LAST D block, the combine
+    output is pinned during phase 0 and re-walked in phase 1 — block
+    count must not change the result beyond fp32 reassociation."""
+    from repro.kernels.robust_stats.ops import wfagg_round_indexed
+
+    N, K, d = 6, 4, 384
+    models = jax.random.normal(jax.random.PRNGKey(12), (N, d), jnp.float32) + 0.2
+    prev = jax.random.normal(jax.random.PRNGKey(13), (N, d), jnp.float32)
+    idx, val = _irregular(N, K, seed=3, min_degree=1)
+    cfg = wf.WFAggConfig(transient=0, f=1)
+    tbands = jax.vmap(
+        lambda hs, hb: wf.trust.temporal_bands(
+            hs, hb, jnp.asarray(2), jnp.asarray(3), cfg)
+    )(0.5 * jnp.ones((N, cfg.window, K)), 0.5 * jnp.ones((N, cfg.window, K)))
+    rs = {}
+    for label, block in (("one", None), ("multi", 128)):
+        rs[label] = wfagg_round_indexed(models, models, idx, val, cfg,
+                                        prev=prev, tbands=tbands,
+                                        block_d=block)
+    for a, b in zip(rs["one"], rs["multi"]):
+        for ga, gb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                       rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellite: the reference backend's valid-aware oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("filters", ["wfagg", "alt"])
+def test_reference_backend_honors_valid_mask(filters):
+    """wfagg_batch(backend="reference") with a padded valid mask used to
+    raise NotImplementedError; the valid-aware oracle must now match the
+    plain single-node reference pipeline run on each node's TRUE (and
+    compacted) neighbor slate."""
+    N, K, d = 10, 6, 260
+    models = jax.random.normal(jax.random.PRNGKey(9), (N, d), jnp.float32) + 0.3
+    idx, valid = _irregular(N, K, seed=11, min_degree=1)
+    mk = wf.alt_wfagg_config if filters == "alt" else wf.WFAggConfig
+    cfg = mk(backend="reference", use_temporal=False, f=1,
+             **({"multi_krum_m": 2} if filters == "alt" else {}))
+    out, _, info = wf.wfagg_batch(models, models, None, cfg,
+                                  neighbor_idx=idx, valid=valid)
+    for n in range(N):
+        sel = np.asarray(idx[n])[np.asarray(valid[n])]
+        v = len(sel)
+        cfg_n = mk(backend="reference", use_temporal=False, f=1,
+                   **({"multi_krum_m": min(2, v)} if filters == "alt" else {}))
+        out_n, _, info_n = wf.wfagg(models[n], models[jnp.asarray(sel)],
+                                    None, cfg_n)
+        for m in ("mask_d", "mask_c"):
+            got = np.asarray(info[m][n])[np.asarray(valid[n])]
+            assert np.array_equal(got, np.asarray(info_n[m])), (n, m, v)
+            assert not np.asarray(info[m][n])[~np.asarray(valid[n])].any()
+        np.testing.assert_allclose(np.asarray(out[n]), np.asarray(out_n),
+                                   rtol=ATOL, atol=ATOL, err_msg=str(n))
+
+
+def test_reference_backend_degree0_keeps_local():
+    N, K, d = 6, 3, 128
+    idx, valid = _irregular(N, K, seed=2, min_degree=0)
+    valid = valid.at[1].set(False)        # force at least one empty slate
+    idx = idx.at[1].set(1)
+    cfg = wf.WFAggConfig(backend="reference", use_temporal=False, f=1)
+    u = jax.random.normal(jax.random.PRNGKey(1), (N, d)) + 0.1
+    out, _, info = wf.wfagg_batch(u, u, None, cfg, neighbor_idx=idx,
+                                  valid=valid)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(u[1]),
+                               rtol=1e-6, atol=1e-6)
+    assert int(np.asarray(info["n_accepted"])[1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# launch-count + HLO assertions
+# ---------------------------------------------------------------------------
+
+def _count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns through all sub-jaxprs."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def subjaxprs(val):
+        if isinstance(val, ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for val in eqn.params.values():
+            for sub in subjaxprs(val):
+                n += _count_pallas_calls(sub)
+    return n
+
+
+@pytest.mark.parametrize("aggregator", ["wfagg", "alt_wfagg"])
+def test_round_is_single_pallas_launch(aggregator):
+    """The jitted dynamic round must contain exactly ONE aggregation
+    pallas_call under the single-launch backend (the two-launch fallback
+    keeps two — sanity check that the counter sees them), and its
+    compiled HLO must stay (N, K, d)-free."""
+    topo = make_topology(n_nodes=10, degree=4, n_malicious=2, kind="ring",
+                         seed=0)
+    data = SyntheticImages()
+    sched = dyn.churn_schedule(topo, 3, seed=1)
+    N, K = topo.n_nodes, sched.width
+    counts = {}
+    for backend in ("fused", "fused_two_launch"):
+        cfg = DFLConfig(aggregator=aggregator, attack="ipm_100", model="mlp",
+                        wfagg_backend=backend)
+        fn = build_round_fn(cfg, topo, data, dynamic=True)
+        state = init_dfl_state(cfg, topo, degree=K)
+        args = (state, jnp.asarray(sched.neighbor_idx[0]),
+                jnp.asarray(sched.valid[0]), jnp.asarray(sched.malicious[0]))
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        counts[backend] = _count_pallas_calls(jaxpr.jaxpr)
+        if backend == "fused":
+            hlo = fn.lower(*args).compile().as_text()
+            # d-sized (N, K, d) buffers only: the alt_wfagg (N, K, K)
+            # Gram is a legit O(K^2) statistic, not a gossip tensor
+            hits = sorted({m for m in re.findall(
+                rf"f32\[{N},{K},(\d+)\]", hlo) if int(m) > 16 * K})
+            assert hits == [], hits
+    assert counts["fused"] == 1, counts
+    assert counts["fused_two_launch"] >= 2, counts
+
+
+def test_memory_passes_one_launch_accounting():
+    """The indexed single-launch round reports ~1 candidate pass; the
+    two-launch fallback keeps 2; Alt-WFAgg folds its Gram in-kernel."""
+    one = wf.WFAggConfig()
+    two = wf.WFAggConfig(backend="fused_two_launch")
+    assert wf.memory_passes(one, include_gather=True, indexed=True) == 1
+    assert wf.memory_passes(two, include_gather=True, indexed=True) == 2
+    assert wf.memory_passes(
+        wf.alt_wfagg_config(), include_gather=True, indexed=True) == 1
+    # non-indexed entries keep the two-launch accounting
+    assert wf.memory_passes(one) == 2
+    assert wf.memory_passes(wf.alt_wfagg_config()) == 3
+
+
+# ---------------------------------------------------------------------------
+# stacked (mode-B) layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["wfagg", "alt_wfagg"])
+def test_stacked_one_launch_matches_fallbacks(method):
+    import dataclasses
+
+    from repro.distributed.robust_allreduce import (
+        RobustAggConfig, init_tree_agg_state, robust_allreduce_stacked)
+
+    K = 6
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, 24, 6)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (K, 80))}
+    wcfg = wf.WFAggConfig(f=1, transient=1, window=2)
+    base = RobustAggConfig(method=method, wfagg=wcfg, layout="stacked")
+    cfgs = {b: dataclasses.replace(base, backend=b) for b in BACKENDS}
+    like = jax.tree.map(lambda x: x[0], g)
+    states = {b: init_tree_agg_state(c, K, like) for b, c in cfgs.items()}
+    for r in range(4):
+        gr = jax.tree.map(lambda x: x + 0.1 * r, g)
+        res = {}
+        for b, c in cfgs.items():
+            out, states[b], info = robust_allreduce_stacked(gr, c, states[b])
+            res[b] = (out, info)
+        for b in ("fused_two_launch", "reference"):
+            np.testing.assert_allclose(
+                np.asarray(res["fused"][1]["weights"]),
+                np.asarray(res[b][1]["weights"]), atol=ATOL)
+            for k in g:
+                np.testing.assert_allclose(
+                    np.asarray(res["fused"][0][k]),
+                    np.asarray(res[b][0][k]), rtol=1e-4, atol=ATOL,
+                    err_msg=(r, b, k))
