@@ -9,18 +9,24 @@ Beyond-paper switches: ``--topology erdos_renyi`` runs the gather-free
 irregular-degree path (padded neighbor tables), ``--backend
 fused|fused_two_launch|reference`` selects the WFAgg execution backend
 (fused = the single-launch round kernel, the default), and
-``--scenario churn|link_failure|partition|mobility|sleeper`` runs the
-whole experiment under a round-varying topology schedule (one jit,
-lax.scan over the schedule — the graph and the Byzantine set change
-every round with no retrace) and prints the DART-style per-round
-robustness time series.  Every backend handles irregular topologies and
-dynamic scenarios: the fused paths in-kernel, the reference backend via
-the valid-aware pure-jnp oracle.
+``--scenario churn|link_failure|partition|mobility|sleeper|eclipse|dos|
+collusion`` runs the whole experiment under a round-varying topology
+schedule (one jit, lax.scan over the schedule — the graph and the
+Byzantine set change every round with no retrace) and prints the
+DART-style per-round robustness time series.  Every backend handles
+irregular topologies and dynamic scenarios: the fused paths in-kernel,
+the reference backend via the valid-aware pure-jnp oracle — and the
+baseline aggregators (mean/median/trimmed_mean/krum/multi_krum/
+clustering) run scenarios too, through the valid-mask-aware
+``DYN_AGGREGATORS`` variants.  ``--attack band_rider|min_max`` runs the
+defense-aware adaptive adversaries (see docs/THREAT_MODEL.md).
 """
 import argparse
 
 import numpy as np
 
+from repro.core.aggregators import DYN_AGGREGATORS
+from repro.core.attacks import ATTACK_NAMES
 from repro.core.topology import make_topology
 from repro.data.synthetic import SyntheticImages
 from repro.dfl.dynamics import SCENARIO_NAMES, make_schedule
@@ -31,9 +37,7 @@ from repro.dfl.engine import (AGGREGATOR_NAMES, DFLConfig,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--aggregator", default="wfagg", choices=AGGREGATOR_NAMES)
-    ap.add_argument("--attack", default="noise",
-                    choices=("none", "noise", "sign_flip", "label_flip",
-                             "ipm_0.5", "ipm_100", "alie"))
+    ap.add_argument("--attack", default="noise", choices=ATTACK_NAMES)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--model", default="mlp", choices=("mlp", "lenet"))
     ap.add_argument("--centralized", action="store_true")
@@ -61,9 +65,11 @@ def main() -> None:
     if args.scenario:
         if args.centralized:
             ap.error("--scenario is a decentralized (gossip) feature")
-        if args.aggregator not in ("wfagg", "alt_wfagg"):
-            ap.error("--scenario requires --aggregator wfagg|alt_wfagg "
-                     "(the only valid-mask-aware aggregation path)")
+        if args.aggregator not in ("wfagg", "alt_wfagg") \
+                and args.aggregator not in DYN_AGGREGATORS:
+            ap.error(f"--scenario needs a valid-mask-aware aggregator: "
+                     f"wfagg, alt_wfagg or one of "
+                     f"{', '.join(DYN_AGGREGATORS)}")
 
     kind = "complete" if args.centralized else args.topology
     topo = make_topology(n_nodes=args.nodes, degree=args.degree,

@@ -42,4 +42,14 @@ python benchmarks/agg_microbench.py --kernels --sizes 8x4096 \
 # table documented in src/repro/kernels/README.md (single-launch = ~1).
 python scripts/passes_gate.py
 
+# Robustness-matrix regression gate: re-runs the committed gate subgrid
+# (benchmarks/BENCH_robustness.json) and fails when any attack x
+# scenario x aggregator cell degrades beyond tolerance.  The comparator
+# self-test is instant; the grid re-run takes a few minutes — skip it
+# with ROBUSTNESS_GATE=0 (e.g. for kernel-only iterations).
+python scripts/robustness_gate.py --self-test
+if [[ "${ROBUSTNESS_GATE:-1}" == "1" ]]; then
+  python scripts/robustness_gate.py
+fi
+
 echo "check.sh: OK"

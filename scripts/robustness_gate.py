@@ -1,0 +1,196 @@
+"""Robustness-matrix regression gate.
+
+``benchmarks/BENCH_robustness.json`` pins the attack x scenario x
+aggregator gate subgrid (``benchmarks.robustness_matrix.GATE_GRID``).
+This gate re-runs EXACTLY that grid (the meta block of the committed
+JSON carries every knob) and fails when any cell's final benign
+accuracy or consistency R^2 degrades beyond tolerance — plus two
+structural claims of the adaptive-adversary evaluation that must hold
+on the FRESH numbers, not just relative to the baseline:
+
+  * each adaptive attack (``core.attacks.ADAPTIVE_ATTACKS``) still
+    measurably degrades at least one baseline aggregator on some
+    scenario (if it stops biting, the attack regressed — the grid would
+    silently measure nothing), and
+  * WFAgg stays within tolerance of its own attack-free cell on the
+    static scenario under EVERY attack in the grid (the robustness
+    claim itself).
+
+Run via ``scripts/check.sh`` (and as its own CI step):
+
+    PYTHONPATH=src python scripts/robustness_gate.py
+    PYTHONPATH=src python scripts/robustness_gate.py --self-test
+
+``--self-test`` proves the comparator can fail: it replays the
+committed baseline as the "fresh" run but swaps the ``ipm_100`` WFAgg
+cell for the ``ipm_100`` mean cell (mean collapses under IPM; WFAgg
+must not) and asserts the gate rejects it.  No experiments run.
+
+Regenerate the baseline after an intentional change:
+
+    PYTHONPATH=src python -m benchmarks.robustness_matrix --gate-grid \
+        --out benchmarks/BENCH_robustness.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir)
+# `python scripts/robustness_gate.py` puts scripts/ on sys.path, not the
+# repo root that holds the benchmarks package, nor src/ that holds repro
+sys.path.insert(0, _REPO_ROOT)
+sys.path.insert(1, os.path.join(_REPO_ROOT, "src"))
+
+from repro.core.attacks import ADAPTIVE_ATTACKS
+
+BASELINE = os.path.join(_REPO_ROOT, "benchmarks", "BENCH_robustness.json")
+
+# Per-cell regression tolerances vs the committed baseline.  The grid is
+# seeded and single-threaded deterministic in practice, but compiler
+# updates and accelerator nondeterminism wiggle low-round accuracies by
+# a few points — the tolerances absorb that while still catching a
+# collapsed cell (attack regressions move accuracy by 10-20+ points,
+# see the baseline's mean-under-IPM cells).
+TOL_ACC = 0.06
+TOL_R2 = 0.15
+# An adaptive attack "measurably degrades" a baseline aggregator when it
+# costs at least this much final accuracy vs that aggregator's
+# attack-free cell on the same scenario.
+DEGRADE_MIN = 0.08
+# WFAgg's static-scenario accuracy under every attack must stay within
+# this of its own attack-free static cell.
+WFAGG_STATIC_TOL = 0.06
+
+_BASELINE_AGGS = ("mean", "median", "trimmed_mean", "krum", "multi_krum",
+                  "clustering")
+
+
+def _key(attack, scenario, aggregator):
+    return f"{attack}|{scenario}|{aggregator}"
+
+
+def compare(baseline: dict, fresh_cells: dict) -> list:
+    """All gate failures (empty = green) of ``fresh_cells`` against the
+    committed ``baseline`` dict."""
+    meta = baseline["meta"]
+    failures = []
+    for key, base in baseline["cells"].items():
+        cell = fresh_cells.get(key)
+        if cell is None:
+            failures.append(f"missing cell {key}")
+            continue
+        if cell["final_acc"] < base["final_acc"] - TOL_ACC:
+            failures.append(
+                f"{key}: final_acc {cell['final_acc']:.4f} < baseline "
+                f"{base['final_acc']:.4f} - {TOL_ACC}")
+        if cell["final_r2"] < base["final_r2"] - TOL_R2:
+            failures.append(
+                f"{key}: final_r2 {cell['final_r2']:.4f} < baseline "
+                f"{base['final_r2']:.4f} - {TOL_R2}")
+
+    # structural claim 1: every adaptive attack in the grid still bites
+    # some baseline aggregator somewhere
+    for attack in meta["attacks"]:
+        if attack not in ADAPTIVE_ATTACKS:
+            continue
+        bites = []
+        for scenario in meta["scenarios"]:
+            for agg in meta["aggregators"]:
+                if agg not in _BASELINE_AGGS:
+                    continue
+                clean = fresh_cells.get(_key("none", scenario, agg))
+                hit = fresh_cells.get(_key(attack, scenario, agg))
+                if clean and hit and (
+                        hit["final_acc"]
+                        < clean["final_acc"] - DEGRADE_MIN):
+                    bites.append((scenario, agg))
+        if not bites:
+            failures.append(
+                f"adaptive attack {attack!r} no longer degrades any "
+                f"baseline aggregator by > {DEGRADE_MIN} — the attack "
+                "(or the grid) regressed to a no-op")
+
+    # structural claim 2: WFAgg holds on the static scenario under every
+    # attack in the grid
+    if "wfagg" in meta["aggregators"] and "static" in meta["scenarios"]:
+        clean = fresh_cells[_key("none", "static", "wfagg")]
+        for attack in meta["attacks"]:
+            cell = fresh_cells[_key(attack, "static", "wfagg")]
+            if cell["final_acc"] < clean["final_acc"] - WFAGG_STATIC_TOL:
+                failures.append(
+                    f"wfagg static under {attack!r}: final_acc "
+                    f"{cell['final_acc']:.4f} more than {WFAGG_STATIC_TOL} "
+                    f"below its attack-free {clean['final_acc']:.4f} — the "
+                    "robustness claim broke")
+    return failures
+
+
+def self_test(baseline: dict) -> None:
+    """Prove the comparator fails when mean is substituted for WFAgg
+    under ipm_100 (mean collapses under IPM; the doctored 'fresh' run
+    must be rejected on both the per-cell and the structural check)."""
+    doctored = dict(baseline["cells"])
+    swapped = 0
+    for scenario in baseline["meta"]["scenarios"]:
+        src = _key("ipm_100", scenario, "mean")
+        dst = _key("ipm_100", scenario, "wfagg")
+        if src in doctored and dst in doctored:
+            doctored[dst] = doctored[src]
+            swapped += 1
+    if not swapped:
+        raise SystemExit("self-test could not doctor the baseline: no "
+                         "ipm_100 mean/wfagg cell pair in the grid")
+    failures = compare(baseline, doctored)
+    if not failures:
+        raise SystemExit(
+            "self-test FAILED: the gate accepted mean's ipm_100 cells "
+            "passed off as wfagg — the comparator cannot detect a "
+            "robustness regression")
+    print(f"self-test: doctored run rejected with {len(failures)} "
+          "failure(s), e.g.:")
+    print(f"  {failures[0]}")
+    # the clean baseline must pass against itself, or the gate is noise
+    residual = compare(baseline, baseline["cells"])
+    if residual:
+        raise SystemExit("self-test FAILED: the committed baseline does "
+                         f"not pass against itself: {residual}")
+    print("self-test: baseline passes against itself")
+    print("robustness_gate self-test: OK")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the comparator rejects a doctored run "
+                         "(no experiments)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.self_test:
+        self_test(baseline)
+        return
+
+    from benchmarks.robustness_matrix import run_matrix
+    meta = dict(baseline["meta"])
+    meta.pop("wall_s", None)
+    fresh = run_matrix(meta.pop("attacks"), meta.pop("scenarios"),
+                       meta.pop("aggregators"), **meta)
+    failures = compare(baseline, fresh["cells"])
+    if failures:
+        for fail in failures:
+            print(f"  REGRESSION {fail}")
+        raise SystemExit(
+            f"robustness_gate: {len(failures)} regression(s) vs "
+            f"{os.path.relpath(args.baseline)}")
+    print(f"robustness_gate: OK ({len(baseline['cells'])} cells within "
+          f"tolerance, structural claims hold)")
+
+
+if __name__ == "__main__":
+    main()

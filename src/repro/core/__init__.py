@@ -1,12 +1,14 @@
 """Core library: the paper's contribution (WFAgg) + SOTA baselines."""
 from repro.core.aggregators import (
     AGGREGATORS,
+    DYN_AGGREGATORS,
     clustering_agg,
     clustering_select,
     coordinate_median,
     krum_agg,
     krum_scores,
     masked_mean,
+    masked_median,
     mean_agg,
     median_agg,
     multi_krum_agg,
@@ -15,13 +17,17 @@ from repro.core.aggregators import (
     trimmed_mean_agg,
 )
 from repro.core.attacks import (
+    ADAPTIVE_ATTACKS,
     ATTACK_NAMES,
     AttackConfig,
+    DefenseView,
     alie_attack,
     apply_matrix_attack,
     apply_model_attack,
+    band_rider_attack,
     flip_labels,
     ipm_attack,
+    min_max_attack,
     noise_attack,
     sign_flip_attack,
 )

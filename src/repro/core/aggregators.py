@@ -223,8 +223,112 @@ def clustering_agg(updates: Array) -> Tuple[Array, Array]:
 
 
 # ---------------------------------------------------------------------------
+# valid-mask-aware (dynamic) variants
+# ---------------------------------------------------------------------------
+#
+# Padded gossip slates carry invalid slots (irregular degrees, dynamic
+# topologies), so every baseline also exists in a ``*_dyn`` form taking a
+# traced ``valid: (K,) bool`` mask: invalid candidates never influence
+# the aggregate and never appear in the participation mask.  With
+# ``valid`` all-True each reduces to its static counterpart.  These are
+# what lets the DFL engine route mean/median/krum/… through the same
+# compile-once dynamic-topology scan as WFAgg.
+
+def masked_median(updates: Array, valid: Array) -> Array:
+    """Coordinate-wise median of the VALID rows with a traced mask: the
+    invalid rows sort to +inf and the two middle elements of the valid
+    prefix are read at traced positions.  Matches ``coordinate_median``
+    when every row is valid."""
+    K = updates.shape[0]
+    valid = valid.astype(bool)
+    srt = jnp.sort(jnp.where(valid[:, None], updates, jnp.inf), axis=0)
+    v = valid.sum()
+    lo = jnp.clip((v - 1) // 2, 0, K - 1)
+    hi = jnp.clip(v // 2, 0, K - 1)
+    med = 0.5 * (srt[lo] + srt[hi])
+    return jnp.where(v > 0, med, jnp.zeros_like(med))
+
+
+def median_agg_dyn(updates: Array, valid: Array) -> Tuple[Array, Array]:
+    return masked_median(updates, valid), valid.astype(bool)
+
+
+def trimmed_mean_agg_dyn(updates: Array, valid: Array,
+                         beta: float = 0.1) -> Tuple[Array, Array]:
+    """beta-trimmed mean over the valid rows: per coordinate, drop the
+    floor(beta * n_valid) smallest and largest VALID values (a traced
+    rank window over the +inf-padded sort), mean the rest."""
+    K = updates.shape[0]
+    valid = valid.astype(bool)
+    v = valid.sum()
+    t = (beta * v.astype(jnp.float32)).astype(jnp.int32)
+    srt = jnp.sort(jnp.where(valid[:, None], updates, jnp.inf), axis=0)
+    ranks = jnp.arange(K)[:, None]
+    keep = (ranks >= t) & (ranks < v - t)
+    denom = jnp.maximum((v - 2 * t).astype(updates.dtype), 1.0)
+    out = jnp.sum(jnp.where(keep, srt, 0.0), axis=0) / denom
+    return jnp.where(v > 0, out, jnp.zeros_like(out)), valid
+
+
+def _masked_sq_dists(updates: Array, valid: Array) -> Array:
+    vpair = valid[:, None] & valid[None, :]
+    return jnp.where(vpair, pairwise_sq_dists(updates), jnp.inf)
+
+
+def krum_agg_dyn(updates: Array, valid: Array, f: int = 2) -> Tuple[Array, Array]:
+    valid = valid.astype(bool)
+    scores = krum_scores_from_sq_dists_dyn(
+        _masked_sq_dists(updates, valid), f, valid.sum())
+    scores = jnp.where(valid, scores, jnp.inf)
+    best = jnp.argmin(scores)
+    mask = jnp.zeros((updates.shape[0],), dtype=bool).at[best].set(True) & valid
+    return masked_mean(updates, mask), mask
+
+
+def multi_krum_agg_dyn(updates: Array, valid: Array, f: int = 2,
+                       m: int | None = None) -> Tuple[Array, Array]:
+    """Multi-Krum with a traced valid count: keep min(m, n_valid) best
+    (paper default m = K/4 becomes n_valid/4)."""
+    K = updates.shape[0]
+    valid = valid.astype(bool)
+    v = valid.sum()
+    scores = jnp.where(
+        valid,
+        krum_scores_from_sq_dists_dyn(_masked_sq_dists(updates, valid), f, v),
+        jnp.inf)
+    keep = (jnp.maximum(v // 4, 1) if m is None
+            else jnp.minimum(jnp.asarray(m, jnp.int32), v))
+    mask = smallest_k_mask_dyn(scores, keep) & valid
+    return masked_mean(updates, mask), mask
+
+
+def clustering_agg_dyn(updates: Array, valid: Array) -> Tuple[Array, Array]:
+    valid = valid.astype(bool)
+    D = jnp.where(valid[:, None] & valid[None, :],
+                  cosine_distance_matrix(updates), jnp.inf)
+    mask = clustering_select_from_dist_dyn(D, valid)
+    return masked_mean(updates, mask), mask
+
+
+def mean_agg_dyn(updates: Array, valid: Array) -> Tuple[Array, Array]:
+    valid = valid.astype(bool)
+    return masked_mean(updates, valid), valid
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
+
+# Valid-mask-aware registry: same kwargs convention as AGGREGATORS plus a
+# leading traced ``valid`` mask.
+DYN_AGGREGATORS = {
+    "mean": lambda u, v, **kw: mean_agg_dyn(u, v),
+    "median": lambda u, v, **kw: median_agg_dyn(u, v),
+    "trimmed_mean": lambda u, v, **kw: trimmed_mean_agg_dyn(u, v, beta=kw.get("beta", 0.1)),
+    "krum": lambda u, v, **kw: krum_agg_dyn(u, v, f=kw.get("f", 2)),
+    "multi_krum": lambda u, v, **kw: multi_krum_agg_dyn(u, v, f=kw.get("f", 2), m=kw.get("m")),
+    "clustering": lambda u, v, **kw: clustering_agg_dyn(u, v),
+}
 
 AGGREGATORS = {
     "mean": lambda u, **kw: mean_agg(u),

@@ -1,22 +1,39 @@
-"""Model-poisoning and data-poisoning attacks (paper Section V-B).
+"""Model-poisoning and data-poisoning attacks (paper Section V-B) plus
+defense-aware adaptive adversaries (DART, arXiv 2407.08652).
+
+Three adversary classes, by what the attacker can observe:
+
+  oblivious   noise / sign_flip / label_flip — no knowledge of anyone.
+  omniscient  alie / ipm — computed from the benign cohort's updates
+              (the standard strong threat model of the literature).
+  adaptive    band_rider / min_max — additionally observe the DEFENSE:
+              a ``DefenseView`` carries the per-victim WFAgg-T EWMA
+              acceptance bands (``core.trust.temporal_bands``), the
+              previous-round model matrix the temporal metrics are
+              measured against, and the gossip neighbor table.  The
+              attacks solve for the largest deviation that the filters
+              still accept — the adversary the paper never evaluates.
 
 Model-poisoning attacks transform the flat update vector(s) a Byzantine
-node sends.  ALIE and IPM are omniscient attacks: they are computed from
-the benign cohort's updates (standard threat model in the literature).
-Label-Flipping is a data poisoning attack and is applied to the batch
-labels inside the training step instead.
+node sends; Label-Flipping is a data-poisoning attack applied to the
+batch labels inside the training step instead.
 
-All functions are jit-safe.
+All functions are jit-safe: benign-cohort statistics are masked sums
+(``malicious`` may be traced), and every adaptive construction is closed
+form — no host round-trips, so the attacks run inside the engine's
+single-compile dynamic scan.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+_EPS = 1e-12
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +43,40 @@ class AttackConfig:
     noise_sigma: float = 0.1    # Noise attack std  (paper: 0.1)
     alie_zmax: float = 0.5      # ALIE z_max (paper: 0.5)
     ipm_eps: float = 0.5        # IPM epsilon (paper evaluates 0.5 and 100)
+    # Adaptive-attack safety margin: band_rider targets deviations this
+    # relative fraction INSIDE the acceptance interval (never exactly on
+    # the edge, where fp rounding could tip the filter), min_max scales
+    # its deviation to (1 - margin) of the feasible radius.
+    adaptive_margin: float = 0.05
+
+
+class DefenseView(NamedTuple):
+    """What an adaptive adversary sees of WFAgg's filter state.
+
+    The engine assembles this right before the attack step of a round —
+    every field is either a traced array of the current jitted round or
+    ``None`` (statically) when the corresponding defense state does not
+    exist, so threading the view through ``lax.scan`` costs nothing.
+
+      neighbor_idx  (N, K) gossip table — who receives whose model
+      valid         (N, K) real-edge mask of padded slates (None = all)
+      prev          previous-round sent models, aligned with the
+                    candidate axis of the attacked matrix ((N, d) in the
+                    mode-A engine; the per-leaf prev in mode-B) — the
+                    reference point of the WFAgg-T metrics
+      tbands        (N, 4*K) flat per-victim WFAgg-T acceptance bands
+                    ``[lo_d | hi_d | lo_c | hi_c]`` exactly as
+                    ``core.trust.temporal_bands`` precomputes them for
+                    the kernel (None: no temporal defense is active)
+      f             the defense's assumed Byzantine count (filter keep
+                    counts derive from it)
+    """
+
+    neighbor_idx: Optional[Array] = None
+    valid: Optional[Array] = None
+    prev: Optional[Array] = None
+    tbands: Optional[Array] = None
+    f: int = 2
 
 
 def noise_attack(update: Array, key: Array, mu: float = 0.1, sigma: float = 0.1) -> Array:
@@ -58,6 +109,209 @@ def ipm_attack(benign: Array, eps: float = 0.5) -> Array:
     return -eps * jnp.mean(benign, axis=0)
 
 
+# ---------------------------------------------------------------------------
+# adaptive (defense-aware) attacks
+# ---------------------------------------------------------------------------
+
+def _masked_moments(mf: Array, benign_w: Array) -> Tuple[Array, Array, Array]:
+    """(mu, sd, n_benign) of the benign rows of a flat (K, P) stack."""
+    n_benign = jnp.maximum(benign_w.sum(), 1.0)
+    mu = jnp.sum(mf * benign_w[:, None], axis=0) / n_benign
+    var = jnp.sum(benign_w[:, None] * (mf - mu[None, :]) ** 2, axis=0) / n_benign
+    return mu, jnp.sqrt(jnp.maximum(var, 0.0)), n_benign
+
+
+def _masked_coordinate_median(mf: Array, benign: Array) -> Array:
+    """Coordinate-wise median of the benign rows (traced mask, no boolean
+    indexing): invalid rows sort to +inf and the two middle elements are
+    read at the dynamic positions of the benign count."""
+    K = mf.shape[0]
+    big = jnp.where(benign[:, None], mf, jnp.inf)
+    srt = jnp.sort(big, axis=0)
+    v = benign.sum()
+    lo = jnp.clip((v - 1) // 2, 0, K - 1)
+    hi = jnp.clip(v // 2, 0, K - 1)
+    med = 0.5 * (srt[lo] + srt[hi])
+    return jnp.where(v > 0, med, jnp.zeros_like(med))
+
+
+def _sender_band_limits(view: DefenseView, malicious: Array, K: int):
+    """Fold the per-(victim, slot) WFAgg-T bands into per-SENDER limits.
+
+    A Byzantine node sends ONE model to every neighbor, so to stay inside
+    every benign victim's band it must satisfy the tightest of them:
+    scatter-min the upper edges / scatter-max the lower edges over all
+    valid edges whose receiver is benign.  Returns four (K,) vectors
+    ``(lo_d, hi_d, lo_c, hi_c)``; senders with no constrained edge come
+    back ``(-inf, +inf)`` (unconstrained), senders facing an INACTIVE
+    band (transient rounds encode ``(+inf, -inf)``) come back infeasible
+    — the attack falls back to mimicry for those.
+    """
+    idx = view.neighbor_idx
+    N, Knb = idx.shape
+    valid = (jnp.ones((N, Knb), bool) if view.valid is None
+             else view.valid.astype(bool))
+    tb = view.tbands.reshape(N, 4, Knb)
+    # only benign receivers constrain the attacker (fooling a fellow
+    # attacker buys nothing)
+    em = valid & (~malicious)[:, None]
+    flat_idx = idx.reshape(-1)
+
+    def scatter_min(vals):
+        v = jnp.where(em, vals, jnp.inf).reshape(-1)
+        return jnp.full((K,), jnp.inf, vals.dtype).at[flat_idx].min(v)
+
+    def scatter_max(vals):
+        v = jnp.where(em, vals, -jnp.inf).reshape(-1)
+        return jnp.full((K,), -jnp.inf, vals.dtype).at[flat_idx].max(v)
+
+    lo_d = scatter_max(tb[:, 0])
+    hi_d = scatter_min(tb[:, 1])
+    lo_c = scatter_max(tb[:, 2])
+    hi_c = scatter_min(tb[:, 3])
+    return lo_d, hi_d, lo_c, hi_c
+
+
+def band_rider_attack(
+    models: Array,             # (K, P) flat candidate stack
+    malicious: Array,          # (K,) bool
+    view: Optional[DefenseView],
+    cfg: AttackConfig,
+) -> Array:
+    """Temporal mimicry: the largest deviation strictly inside the
+    WFAgg-T acceptance bands of every benign victim.
+
+    WFAgg-T admits a candidate iff its round-over-round squared distance
+    ``s_t = ||c - prev||^2`` and cosine distance ``b_t = 1 - cos(c, prev)``
+    both land inside the victim's EWMA bands.  The attacker solves the
+    inverse problem in closed form: pick targets ``s*``/``b*`` at
+    ``(1 - margin)`` of the tightest band (folded over its victims via
+    ``_sender_band_limits``) and construct, in the 2-D plane spanned by
+    its own previous model ``p`` and a harmful direction, the exact
+    vector realizing both —
+
+        c = a p_hat + a tan(theta) q_hat,   cos(theta) = 1 - b*,
+        a = (|p| + sqrt(|p|^2 - (1+tan^2)(|p|^2 - s*))) / (1 + tan^2)
+
+    (the + root maximizes magnitude; the geometric cap
+    ``b* <= 1 - sqrt(1 - s*/|p|^2)`` keeps the discriminant >= 0).  The
+    tangential direction ``q_hat`` is the attacker's drift-escape
+    direction ``p - mu_benign`` orthogonalized against ``p``, so
+    successive rides compound away from the cohort.  Where bands are
+    inactive/infeasible (transient rounds, zero prev, no temporal
+    defense in the view) the attack degrades to ALIE-style mimicry —
+    the strongest non-adaptive small-perturbation attack.
+    """
+    mf = models.astype(jnp.float32)
+    K = mf.shape[0]
+    benign_w = (~malicious).astype(jnp.float32)
+    mu, sd, _ = _masked_moments(mf, benign_w)
+    fallback = jnp.broadcast_to(mu - cfg.alie_zmax * sd, mf.shape)
+    if (view is None or view.prev is None or view.tbands is None
+            or view.neighbor_idx is None):
+        return fallback
+
+    m = cfg.adaptive_margin
+    lo_d, hi_d, lo_c, hi_c = _sender_band_limits(view, malicious, K)
+    p = view.prev.reshape(K, -1).astype(jnp.float32)
+    P2 = jnp.sum(p * p, axis=-1)
+    Pn = jnp.sqrt(P2)
+    feasible = (jnp.isfinite(hi_d) & jnp.isfinite(hi_c)
+                & (hi_d > 0.0) & (lo_d <= hi_d) & (Pn > 1e-6))
+
+    # distance target: (1 - margin) of the way up the band
+    lo_s = jnp.maximum(lo_d, 0.0)
+    s_tgt = lo_s + (1.0 - m) * jnp.maximum(hi_d - lo_s, 0.0)
+    # cosine target: as much angle as the band AND the geometry allow
+    ratio = jnp.clip(s_tgt / jnp.maximum(P2, _EPS), 0.0, 1.0)
+    b_geom = 1.0 - jnp.sqrt(jnp.maximum(1.0 - ratio, 0.0))
+    lo_b = jnp.clip(lo_c, 0.0, 0.999)
+    hi_b = jnp.clip(jnp.minimum(hi_c, b_geom), 0.0, 0.999)
+    b_tgt = jnp.clip(lo_b + (1.0 - m) * (hi_b - lo_b), 0.0, 0.999)
+
+    cos_t = 1.0 - b_tgt
+    tan2 = jnp.maximum(1.0 / jnp.maximum(cos_t * cos_t, _EPS) - 1.0, 0.0)
+    disc = jnp.maximum(P2 - (1.0 + tan2) * (P2 - s_tgt), 0.0)
+    a = (Pn + jnp.sqrt(disc)) / (1.0 + tan2)
+
+    phat = p / jnp.maximum(Pn, _EPS)[:, None]
+    h = p - mu[None, :]                       # drift-escape direction
+    q = h - jnp.sum(h * phat, -1, keepdims=True) * phat
+    qn = jnp.linalg.norm(q, axis=-1, keepdims=True)
+    # degenerate h || p: any orthogonal direction serves — derive one
+    # deterministically from a rolled copy of p
+    e = jnp.roll(phat, 1, axis=-1)
+    q2 = e - jnp.sum(e * phat, -1, keepdims=True) * phat
+    q2n = jnp.linalg.norm(q2, axis=-1, keepdims=True)
+    qhat = jnp.where(qn > 1e-6, q / jnp.maximum(qn, _EPS),
+                     jnp.where(q2n > 1e-6, q2 / jnp.maximum(q2n, _EPS),
+                               jnp.zeros_like(q)))
+
+    ride = a[:, None] * phat + (a * jnp.sqrt(tan2))[:, None] * qhat
+    return jnp.where(feasible[:, None], ride, fallback)
+
+
+def min_max_attack(
+    models: Array,             # (K, P) flat candidate stack
+    malicious: Array,          # (K,) bool
+    cfg: AttackConfig,
+) -> Array:
+    """Min-max deviation (Shejwalkar & Houmansadr 2021, adapted to the
+    WFAgg filter radii): ``c = mu + gamma * u`` with the largest gamma
+    keeping the attacker inside BOTH distance-filter acceptance regions —
+
+      * ``||c - x_b|| <= max pairwise benign distance`` for every benign
+        ``x_b`` (the classic min-max constraint, which keeps Krum/
+        Multi-Krum scores in the benign range), and
+      * ``||c - med|| <= max benign distance to the coordinate median``
+        (WFAgg-D's radius around the median model),
+
+    each a quadratic in gamma with a closed-form positive root; gamma is
+    the masked min over benign nodes of both caps, scaled by
+    ``1 - margin``.  The deviation direction is the negative benign
+    coordinate deviation ``-sd/||sd||`` (the unit-vector variant of the
+    paper's attack — colinear-with-mu directions cannot move the cosine
+    filter, and sd-directed deviations maximize per-coordinate harm).
+    """
+    mf = models.astype(jnp.float32)
+    benign = ~malicious
+    benign_w = benign.astype(jnp.float32)
+    mu, sd, _ = _masked_moments(mf, benign_w)
+
+    sdn = jnp.linalg.norm(sd)
+    mun = jnp.linalg.norm(mu)
+    u = jnp.where(sdn > 1e-6, -sd / jnp.maximum(sdn, _EPS),
+                  -mu / jnp.maximum(mun, _EPS))
+
+    # max pairwise benign squared distance via the Gram expansion
+    sq = jnp.sum(mf * mf, axis=-1)
+    gram = mf @ mf.T
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    bpair = benign[:, None] & benign[None, :]
+    dmax2 = jnp.max(jnp.where(bpair, d2, -jnp.inf))
+
+    # cap 1: ||mu + g u - x_b||^2 <= dmax^2 for every benign b
+    delta = mu[None, :] - mf                  # (K, P)
+    A = delta @ u                             # (K,)
+    n2 = jnp.sum(delta * delta, axis=-1)
+    g_pair = -A + jnp.sqrt(jnp.maximum(A * A + dmax2 - n2, 0.0))
+    g_pair = jnp.min(jnp.where(benign, g_pair, jnp.inf))
+
+    # cap 2: ||mu + g u - med||^2 <= max_b ||x_b - med||^2 (WFAgg-D radius)
+    med = _masked_coordinate_median(mf, benign)
+    rmed2 = jnp.max(jnp.where(
+        benign, jnp.sum((mf - med[None, :]) ** 2, axis=-1), -jnp.inf))
+    dm = mu - med
+    Am = jnp.dot(dm, u)
+    g_med = -Am + jnp.sqrt(jnp.maximum(Am * Am + rmed2 - jnp.sum(dm * dm), 0.0))
+
+    gamma = (1.0 - cfg.adaptive_margin) * jnp.maximum(
+        jnp.minimum(g_pair, g_med), 0.0)
+    ok = jnp.isfinite(gamma) & (benign_w.sum() >= 2)
+    c = mu + jnp.where(ok, gamma, 0.0) * u
+    return jnp.broadcast_to(c, mf.shape)
+
+
 def apply_model_attack(
     name: str,
     update: Array,
@@ -68,9 +322,12 @@ def apply_model_attack(
     """Dispatch a model-poisoning attack on a single flat update.
 
     ``benign`` is the (K_b, d) stack of benign updates (for omniscient
-    attacks).  ``name`` in {none, noise, sign_flip, label_flip, alie,
-    ipm_0.5, ipm_100}.  label_flip is a no-op here (handled in the data
-    pipeline) so that the engine can treat all attacks uniformly.
+    attacks).  ``name`` is any entry of ``ATTACK_NAMES``; label_flip is
+    a no-op here (handled in the data pipeline) so that the engine can
+    treat all attacks uniformly.  The adaptive attacks run in their
+    no-``DefenseView`` form on this single-update entry (band_rider
+    degrades to ALIE mimicry; min_max keeps its benign-radius caps) —
+    the view-threaded forms live on ``apply_matrix_attack``.
     """
     cfg = cfg or AttackConfig(name=name)
     if name in ("none", "label_flip"):
@@ -87,6 +344,12 @@ def apply_model_attack(
         return ipm_attack(benign, 100.0)
     if name == "ipm":
         return ipm_attack(benign, cfg.ipm_eps)
+    if name in ADAPTIVE_ATTACKS:
+        stack = jnp.concatenate([update[None], benign], axis=0)
+        mal = jnp.zeros((stack.shape[0],), bool).at[0].set(True)
+        if name == "band_rider":
+            return band_rider_attack(stack, mal, None, cfg)[0].astype(update.dtype)
+        return min_max_attack(stack, mal, cfg)[0].astype(update.dtype)
     raise ValueError(f"unknown attack {name!r}")
 
 
@@ -104,6 +367,7 @@ def apply_matrix_attack(
     malicious: Array,          # (K,) bool
     key: Array,
     cfg: Optional[AttackConfig] = None,
+    view: Optional[DefenseView] = None,
 ) -> Array:
     """Replace the malicious rows of a stacked candidate array.
 
@@ -113,6 +377,11 @@ def apply_matrix_attack(
     replaced.  Both the mode-A engine (flat (N, d) model matrix) and the
     mode-B stacked layout (per-leaf (K, *shape)) route through here —
     previously each carried its own copy of this math.
+
+    ``view`` feeds the adaptive attacks (``ADAPTIVE_ATTACKS``) the
+    defense state they ride; it is optional (and ignored by the
+    oblivious/omniscient attacks) so every caller threads it — or
+    ``None`` — through one uniform signature.
     """
     cfg = cfg or AttackConfig(name=name)
     if name in ("none", "label_flip"):
@@ -124,6 +393,14 @@ def apply_matrix_attack(
         return jnp.where(mal, attacked.astype(models.dtype), models)
     if name == "sign_flip":
         return jnp.where(mal, -models, models)
+    if name in ADAPTIVE_ATTACKS:
+        flat = models.reshape(K, -1)
+        if name == "band_rider":
+            attacked = band_rider_attack(flat, malicious, view, cfg)
+        else:
+            attacked = min_max_attack(flat, malicious, cfg)
+        attacked = attacked.reshape(models.shape).astype(models.dtype)
+        return jnp.where(mal, attacked, models)
     benign_w = (~malicious).reshape(mal.shape).astype(jnp.float32)
     n_benign = jnp.maximum(K - malicious.sum(), 1).astype(jnp.float32)
     mf = models.astype(jnp.float32)
@@ -139,4 +416,11 @@ def apply_matrix_attack(
                      models)
 
 
-ATTACK_NAMES = ("none", "noise", "sign_flip", "label_flip", "ipm_0.5", "ipm_100", "alie")
+# Adaptive (defense-aware) attacks: consume the DefenseView.
+ADAPTIVE_ATTACKS = ("band_rider", "min_max")
+
+# THE attack registry: every attack-choice surface (engine configs, CLI
+# --attack flags, the robustness matrix, benchmark tables) derives its
+# choices from this tuple — do not re-enumerate attack names elsewhere.
+ATTACK_NAMES = ("none", "noise", "sign_flip", "label_flip",
+                "ipm_0.5", "ipm_100", "ipm", "alie") + ADAPTIVE_ATTACKS

@@ -29,6 +29,19 @@ Scenarios (``SCENARIOS`` registry, mirroring ``AGGREGATOR_NAMES``):
                 behave benignly until their wake round (late-joining /
                 sleeper adversaries)
 
+Topology ATTACKS (the adversary rewires the graph, arXiv 2407.05141):
+
+  eclipse       Byzantine nodes monopolize one victim's slate: every
+                benign edge of the victim is cut and all attackers
+                connect to it, so its whole padded slate is poisoned
+  dos           a chosen node's edges are dropped for a window of
+                rounds (denial of service / jamming — the degree-0
+                self-fallback path under adversarial timing)
+  collusion     attackers abandon their assigned positions and rewire
+                onto a shared set of high-degree victims, concentrating
+                f Byzantine neighbors where placement="spaced" promised
+                dispersion
+
 All generators are deterministic in (topology, rounds, seed) and
 composable through ``schedule_from_adjacencies`` — hand-build any
 (R, N, N) adjacency stack + (R, N) malicious stack for conditions not
@@ -52,6 +65,7 @@ __all__ = [
     "SCENARIOS", "SCENARIO_NAMES", "make_schedule",
     "churn_schedule", "link_failure_schedule", "partition_schedule",
     "mobility_schedule", "sleeper_schedule", "static_schedule",
+    "eclipse_schedule", "dos_schedule", "collusion_schedule",
 ]
 
 
@@ -153,6 +167,105 @@ def sleeper_schedule(topo: Topology, rounds: int, seed: int = 0,
     return schedule_from_adjacencies(adjs, mal)
 
 
+# ---------------------------------------------------------------------------
+# topology attacks (adversarial graphs as scenarios)
+# ---------------------------------------------------------------------------
+
+def _default_victim(topo: Topology, prefer_malicious_neighbors: bool) -> int:
+    """Deterministic victim choice: the benign node with the most
+    malicious base-graph neighbors (eclipse — the cheapest node to
+    surround) or the highest-degree benign node (dos — the most
+    connective node to silence).  Ties break to the lowest id."""
+    mal = topo.malicious
+    if prefer_malicious_neighbors:
+        score = (topo.adjacency & mal[None, :]).sum(axis=1)
+    else:
+        score = topo.degrees.copy()
+    score = np.where(mal, -1, score)
+    return int(np.argmax(score))
+
+
+def eclipse_schedule(topo: Topology, rounds: int, seed: int = 0,
+                     victim: int = None, start: int = 0,
+                     ) -> TopologySchedule:
+    """Eclipse attack: from round ``start`` on, every benign edge of the
+    victim is cut and EVERY Byzantine node connects to it — the victim's
+    whole padded slate is malicious senders, the strongest per-node
+    poisoning ratio any aggregation rule can face (an f-out-of-f slate
+    defeats every f-robust rule; what the grid measures is the collateral
+    on the REST of the network and how fast the victim re-converges once
+    schedules compose).  ``victim`` defaults to the benign node the base
+    placement already surrounds most."""
+    mal = topo.malicious
+    if not mal.any():
+        return static_schedule(topo, rounds)
+    if victim is None:
+        victim = _default_victim(topo, prefer_malicious_neighbors=True)
+    n = topo.n_nodes
+    adj_e = topo.adjacency.copy()
+    adj_e[victim, :] = False
+    adj_e[:, victim] = False
+    attackers = mal & (np.arange(n) != victim)
+    adj_e[victim, attackers] = True
+    adj_e[attackers, victim] = True
+    adjs = np.stack([topo.adjacency if r < start else adj_e
+                     for r in range(rounds)])
+    return schedule_from_adjacencies(adjs, mal)
+
+
+def dos_schedule(topo: Topology, rounds: int, seed: int = 0,
+                 victim: int = None, start: int = None, length: int = None,
+                 ) -> TopologySchedule:
+    """Denial of service: the victim's edges all drop for the window
+    ``[start, start + length)`` (default: the middle third of the run) —
+    jamming, not poisoning.  The victim rides the degree-0 self-fallback
+    path (all-invalid padded row) and its neighbors lose a benign voice
+    exactly while the poisoning attacks continue elsewhere."""
+    start = rounds // 3 if start is None else start
+    length = max(1, rounds // 3) if length is None else length
+    if victim is None:
+        victim = _default_victim(topo, prefer_malicious_neighbors=False)
+    n = topo.n_nodes
+    down = np.zeros(n, dtype=bool)
+    down[victim] = True
+    adj_d = _cut_node(topo.adjacency, down)
+    adjs = np.stack([adj_d if start <= r < start + length else topo.adjacency
+                     for r in range(rounds)])
+    return schedule_from_adjacencies(adjs, topo.malicious)
+
+
+def collusion_schedule(topo: Topology, rounds: int, seed: int = 0,
+                       shared: int = None) -> TopologySchedule:
+    """Collusion placement: the attackers abandon their base-graph
+    positions (all their edges drop, including attacker-attacker edges —
+    colluders don't waste links on each other) and ALL connect to the
+    same ``shared`` victims, chosen as the highest-degree benign nodes
+    (ties to the lowest id).  Each victim then sees every attacker at
+    once — the worst-case placement a "spaced" deployment assumes away,
+    static across rounds so its effect is attributable to placement
+    alone.  ``shared`` defaults to the max attacker base degree, so the
+    attackers spend exactly the edge budget they had."""
+    mal = topo.malicious
+    if not mal.any():
+        return static_schedule(topo, rounds)
+    n = topo.n_nodes
+    benign_ids = np.flatnonzero(~mal)
+    if shared is None:
+        shared = int(topo.degrees[mal].max())
+    shared = max(1, min(shared, benign_ids.size))
+    # highest-degree benign victims, ties to the lowest id
+    order = benign_ids[np.lexsort((benign_ids, -topo.degrees[benign_ids]))]
+    victims = order[:shared]
+    adj_c = topo.adjacency.copy()
+    adj_c[mal, :] = False
+    adj_c[:, mal] = False
+    att_ids = np.flatnonzero(mal)
+    adj_c[np.ix_(att_ids, victims)] = True
+    adj_c[np.ix_(victims, att_ids)] = True
+    adjs = np.broadcast_to(adj_c, (rounds, n, n))
+    return schedule_from_adjacencies(adjs, mal)
+
+
 ScenarioFn = Callable[..., TopologySchedule]
 
 SCENARIOS: Dict[str, ScenarioFn] = {
@@ -162,6 +275,9 @@ SCENARIOS: Dict[str, ScenarioFn] = {
     "partition": partition_schedule,
     "mobility": mobility_schedule,
     "sleeper": sleeper_schedule,
+    "eclipse": eclipse_schedule,
+    "dos": dos_schedule,
+    "collusion": collusion_schedule,
 }
 
 SCENARIO_NAMES = tuple(SCENARIOS)

@@ -35,6 +35,7 @@ from repro.configs.lenet_mnist import PaperDFLConfig
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk
 from repro.core import metrics as met
+from repro.core import trust
 from repro.core import wfagg as wf
 from repro.core.topology import Topology, TopologySchedule
 from repro.data.synthetic import SyntheticImages
@@ -174,7 +175,8 @@ def _local_train(cfg: DFLConfig, data: SyntheticImages, malicious: Array,
 # ---------------------------------------------------------------------------
 
 def _apply_attacks(cfg: DFLConfig, malicious: Array, flat_models: Array,
-                   rnd: Array) -> Array:
+                   rnd: Array,
+                   view: Optional[atk.DefenseView] = None) -> Array:
     """Replace Byzantine rows of (N, d) with attacked models.
 
     Routed through ``core.attacks.apply_matrix_attack`` (the shared
@@ -182,10 +184,44 @@ def _apply_attacks(cfg: DFLConfig, malicious: Array, flat_models: Array,
     z_max, noise mu/sigma, IPM eps — are honored instead of hardcoded.
     ``malicious`` is traced: dynamic scenarios swap the Byzantine set
     round to round without retracing (apply_matrix_attack's benign-cohort
-    statistics are masked sums, never boolean indexing)."""
+    statistics are masked sums, never boolean indexing).  ``view`` feeds
+    the defense-aware adaptive attacks (``atk.ADAPTIVE_ATTACKS``) the
+    round's filter state; assembled by ``_defense_view``."""
     key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 77), rnd)
     return atk.apply_matrix_attack(
-        cfg.attack, flat_models, malicious, key, cfg.attack_params)
+        cfg.attack, flat_models, malicious, key, cfg.attack_params,
+        view=view)
+
+
+def _defense_view(cfg: DFLConfig, state: "DFLState", neighbor_idx: Array,
+                  neighbor_valid: Optional[Array]) -> Optional[atk.DefenseView]:
+    """Assemble the adaptive adversary's ``DefenseView`` for this round.
+
+    Only built when the configured attack actually consumes it (the view
+    is statically ``None`` otherwise, so oblivious runs trace zero extra
+    work).  The WFAgg-T acceptance bands are precomputed EXACTLY as the
+    defense's own fused path does (vmapped ``trust.temporal_bands`` over
+    the pre-round temporal state) — the adversary sees the very bands it
+    will be filtered by this round.  Bands/prev exist only on the
+    matrix-prev gossip form (wfagg/alt_wfagg, where ``temporal.prev`` is
+    the (N, d) previous model matrix, i.e. per-SENDER); aggregators
+    without that state get a bandless view and the attacks degrade to
+    their mimicry fallback — which is the honest threat model: there is
+    no temporal filter to ride."""
+    if cfg.attack not in atk.ADAPTIVE_ATTACKS or cfg.centralized:
+        return None
+    tbands = prev = None
+    if (state.temporal is not None and state.temporal.prev.ndim == 2
+            and cfg.aggregator in ("wfagg", "alt_wfagg")):
+        wcfg = _wfagg_full_config(cfg, neighbor_idx.shape[1])
+        if wcfg.use_temporal:
+            tbands = jax.vmap(
+                lambda hs, hb, c, tt: trust.temporal_bands(hs, hb, c, tt, wcfg)
+            )(state.temporal.hist_s, state.temporal.hist_b,
+              state.temporal.count, state.temporal.t)
+            prev = state.temporal.prev
+    return atk.DefenseView(neighbor_idx=neighbor_idx, valid=neighbor_valid,
+                           prev=prev, tbands=tbands, f=cfg.paper.f)
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +281,29 @@ def _aggregate_one(cfg: DFLConfig, local: Array, updates: Array,
     raise ValueError(name)
 
 
+def _aggregate_one_dyn(cfg: DFLConfig, local: Array, updates: Array,
+                       valid: Array) -> Array:
+    """Baseline aggregation over one PADDED slate: the valid-mask-aware
+    ``core.aggregators.DYN_AGGREGATORS`` variants, with the same paper
+    hyper-parameters as the static dispatch (Multi-Krum's keep count
+    scales with the traced valid degree).  Degree-0 nodes (DoS'd /
+    partitioned away) keep their local model — there is nothing to
+    aggregate."""
+    p = cfg.paper
+    name = cfg.aggregator
+    kw: Dict[str, Any] = {"f": p.f}
+    if name == "trimmed_mean":
+        kw = {"beta": p.trim_beta}
+    if name == "clustering":
+        kw = {}
+    if name == "multi_krum":
+        v = valid.astype(bool).sum()
+        kw["m"] = jnp.maximum(
+            (p.multi_krum_m_frac * v.astype(jnp.float32)).astype(jnp.int32), 1)
+    out, _ = agg_lib.DYN_AGGREGATORS[name](updates, valid, **kw)
+    return jnp.where(valid.astype(bool).sum() > 0, out, local)
+
+
 # ---------------------------------------------------------------------------
 # the round function
 # ---------------------------------------------------------------------------
@@ -260,9 +319,11 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     mal_mask)`` taking the round's (N, K) neighbor table, (N, K) valid
     mask and (N,) Byzantine mask as TRACED inputs — one compile serves a
     whole round-varying schedule (churn, link failure, mobility, sleeper
-    attackers), graph after graph, with no retrace.  Requires the
-    gather-free wfagg/alt_wfagg fused path (the only aggregation route
-    that honors per-round valid masks).
+    attackers), graph after graph, with no retrace.  wfagg/alt_wfagg run
+    the gather-free fused path; the mean/median/trimmed_mean/krum/
+    multi_krum/clustering baselines route through the valid-mask-aware
+    ``DYN_AGGREGATORS`` variants (a plain gather + per-node vmap — the
+    baseline rows of the robustness matrix, not a kernel path).
 
     NOTE: the WFAgg-T ring buffers in ``state.temporal`` are keyed by
     neighbor SLOT.  ``run_dynamic_experiment`` re-keys them to each
@@ -275,11 +336,12 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
         if cfg.centralized:
             raise NotImplementedError("dynamic schedules are a gossip "
                                       "(decentralized) feature")
-        if cfg.aggregator not in ("wfagg", "alt_wfagg"):
+        if cfg.aggregator not in ("wfagg", "alt_wfagg") \
+                and cfg.aggregator not in agg_lib.DYN_AGGREGATORS:
             raise NotImplementedError(
-                f"aggregator {cfg.aggregator!r} assumes a static regular "
-                "neighbor table; dynamic schedules run through the "
-                "wfagg/alt_wfagg gather-free path")
+                f"aggregator {cfg.aggregator!r} has no valid-mask-aware "
+                "form; dynamic schedules run through the wfagg/alt_wfagg "
+                "gather-free path or the DYN_AGGREGATORS baselines")
         # any wfagg backend works here: the fused paths AND the reference
         # oracle all honor per-round valid masks (dynamic keep counts)
         return jax.jit(_make_round_core(cfg, data))
@@ -290,11 +352,13 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     neighbor_valid = (None if topo.is_regular
                       else jnp.asarray(topo.neighbor_valid))
     if neighbor_valid is not None and not cfg.centralized \
-            and cfg.aggregator not in ("wfagg", "alt_wfagg"):
+            and cfg.aggregator not in ("wfagg", "alt_wfagg") \
+            and cfg.aggregator not in agg_lib.DYN_AGGREGATORS:
         raise NotImplementedError(
-            f"aggregator {cfg.aggregator!r} assumes a regular neighbor "
-            "table; irregular (padded) topologies are supported by the "
-            "wfagg/alt_wfagg gather-free path")
+            f"aggregator {cfg.aggregator!r} has no valid-mask-aware form; "
+            "irregular (padded) topologies are supported by the "
+            "wfagg/alt_wfagg gather-free path or the DYN_AGGREGATORS "
+            "baselines")
     malicious = jnp.asarray(topo.malicious)
     core = _make_round_core(cfg, data)
     return jax.jit(lambda state: core(state, neighbor_idx, neighbor_valid,
@@ -316,7 +380,8 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
             state.rnd
         )
         flat, unravel_one = _ravel_nodes(params)
-        flat = _apply_attacks(cfg, mal_mask, flat, state.rnd)
+        view = _defense_view(cfg, state, neighbor_idx, neighbor_valid)
+        flat = _apply_attacks(cfg, mal_mask, flat, state.rnd, view)
 
         if cfg.centralized:
             # one server-side aggregation over all N received models
@@ -344,6 +409,14 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
                     lambda loc, upd, ts: _aggregate_one(
                         cfg, loc, upd, ts, wfagg_backend="reference")
                 )(flat, gathered, state.temporal)
+            elif neighbor_valid is not None:
+                # baseline aggregators on a padded/dynamic slate: gossip
+                # gather + the valid-mask-aware DYN_AGGREGATORS variants
+                gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
+                new_flat = jax.vmap(
+                    lambda loc, upd, v: _aggregate_one_dyn(cfg, loc, upd, v)
+                )(flat, gathered, neighbor_valid)
+                new_temporal = None
             else:
                 gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
                 new_flat, _ = jax.vmap(

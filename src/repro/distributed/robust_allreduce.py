@@ -464,20 +464,31 @@ def apply_stacked_attack(
     noise_mu: float = 0.1,
     noise_sigma: float = 0.1,
     alie_zmax: float = 0.5,
+    prev: Any = None,
 ) -> Any:
     """Vectorized model-poisoning attacks on stacked candidates (pure
     GSPMD — demo/integration use).  Thin per-leaf wrapper over
     ``core.attacks.apply_matrix_attack`` — the one implementation of the
-    masked-stack attack math, shared with ``dfl.engine``."""
+    masked-stack attack math, shared with ``dfl.engine``.
+
+    ``prev`` optionally carries the previous-round stacked candidates
+    (e.g. ``TreeAggState.prev``) so the adaptive attacks see a per-leaf
+    ``DefenseView`` in mode-B too; the all-to-all stacked layout has no
+    neighbor table or per-victim temporal bands, so the view is
+    prev-only and band_rider degrades to its mimicry fallback — the
+    correct mode-B threat model (the filter state lives per-device)."""
     if attack in ("none", "label_flip"):
         return stacked
     acfg = atk.AttackConfig(name=attack, noise_mu=noise_mu,
                             noise_sigma=noise_sigma, alie_zmax=alie_zmax)
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    prev_leaves = (jax.tree_util.tree_leaves(prev) if prev is not None
+                   else [None] * len(leaves))
     out = [
-        atk.apply_matrix_attack(attack, leaf, malicious,
-                                jax.random.fold_in(key, i), acfg)
-        for i, leaf in enumerate(leaves)
+        atk.apply_matrix_attack(
+            attack, leaf, malicious, jax.random.fold_in(key, i), acfg,
+            view=(atk.DefenseView(prev=pl) if pl is not None else None))
+        for i, (leaf, pl) in enumerate(zip(leaves, prev_leaves))
     ]
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -229,7 +229,9 @@ def test_dynamic_round_hlo_is_gossip_tensor_free():
 def test_dynamic_engine_rejects_unsupported_configs():
     topo = _topo()
     data = SyntheticImages()
-    for bad in (DFLConfig(aggregator="median"),
+    # only WFAgg component ablations (slot-keyed temporal state, no
+    # valid-mask-aware form) and CFL remain unsupported under schedules
+    for bad in (DFLConfig(aggregator="wfagg_t"),
                 DFLConfig(aggregator="wfagg", centralized=True)):
         with pytest.raises(NotImplementedError):
             build_round_fn(bad, topo, data, dynamic=True)
@@ -237,6 +239,8 @@ def test_dynamic_engine_rejects_unsupported_configs():
     # pure-jnp oracle honors per-round valid masks (dynamic keep counts)
     build_round_fn(DFLConfig(aggregator="wfagg", wfagg_backend="reference"),
                    topo, data, dynamic=True)
+    # baseline aggregators route through the DYN_AGGREGATORS variants
+    build_round_fn(DFLConfig(aggregator="median"), topo, data, dynamic=True)
 
 
 def test_indexed_vs_reference_parity_under_churn():

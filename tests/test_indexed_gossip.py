@@ -282,14 +282,19 @@ def test_engine_runs_on_erdos_renyi():
         assert np.isfinite(out["final"]["acc_benign_mean"])
 
 
-def test_engine_rejects_irregular_for_static_aggregators():
+def test_engine_irregular_aggregator_support():
+    """Irregular graphs accept wfagg/alt_wfagg and every DYN_AGGREGATORS
+    baseline (valid-mask-aware path); per-filter variants like wfagg_t
+    have no masked implementation and must still be rejected."""
     from repro.data.synthetic import SyntheticImages
     from repro.dfl.engine import DFLConfig, build_round_fn
 
     topo = make_topology(n_nodes=12, degree=4, n_malicious=1,
                          kind="erdos_renyi", seed=3)
+    data = SyntheticImages()
+    build_round_fn(DFLConfig(aggregator="median"), topo, data)
     with pytest.raises(NotImplementedError):
-        build_round_fn(DFLConfig(aggregator="median"), topo, SyntheticImages())
+        build_round_fn(DFLConfig(aggregator="wfagg_t"), topo, data)
 
 
 # ---------------------------------------------------------------------------
