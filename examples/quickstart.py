@@ -40,7 +40,10 @@ def main() -> None:
           "default backend fuses the filter statistics, the trust-weight "
           "derivation and the WFAgg-E combine into a single-launch "
           "Pallas kernel — ~1 candidate pass per round; see "
-          "src/repro/kernels/README.md.)")
+          "src/repro/kernels/README.md.  That single-launch claim, and "
+          "every other structural invariant of the round, is pinned by "
+          "the computation linter: PYTHONPATH=src python -m "
+          "repro.analysis — docs/STATIC_ANALYSIS.md.)")
 
     # Dynamic topology in 5 lines: the same experiment under node churn —
     # the graph (and each node's neighbor slate) changes EVERY round,

@@ -42,6 +42,17 @@ python benchmarks/agg_microbench.py --kernels --sizes 8x4096 \
 # table documented in src/repro/kernels/README.md (single-launch = ~1).
 python scripts/passes_gate.py
 
+# Computation linter: one static-analysis pass over the jaxprs, optimized
+# HLO and Pallas block specs of every registered entry point (rule
+# catalog in docs/STATIC_ANALYSIS.md).  The self-test doctors a fixture
+# per rule so a rule that stops firing fails here, then the real lint
+# must come back clean.  LINT=0 skips both (kernel-only iterations);
+# LINT_JSON=<path> writes the machine-readable report (CI uploads it).
+if [[ "${LINT:-1}" == "1" ]]; then
+  python -m repro.analysis --self-test
+  python -m repro.analysis ${LINT_JSON:+--json "$LINT_JSON"}
+fi
+
 # Robustness-matrix regression gate: re-runs the committed gate subgrid
 # (benchmarks/BENCH_robustness.json) and fails when any attack x
 # scenario x aggregator cell degrades beyond tolerance.  The comparator

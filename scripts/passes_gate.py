@@ -1,43 +1,39 @@
-"""Memory-passes regression gate.
+"""Memory-passes regression gate — a shim over ``repro.analysis``.
 
 ``core.wfagg.memory_passes`` is the executable form of the traffic table
-in src/repro/kernels/README.md; this gate pins the shipped configs to
-the documented ceilings so a refactor cannot silently regress the
-candidate-pass count (e.g. the single-launch round falling back to two
-launches, or the indexed path regrowing a separate Gram pass).
-
-Run via ``scripts/check.sh`` (and as its own CI step):
+in src/repro/kernels/README.md.  The table itself now lives on the lint
+entry points (``repro.analysis.entry_points``) as ``passes`` rows, and
+the check is the registered ``memory-passes`` rule — this script just
+collects every row from the registry and runs that one rule, keeping
+the historical CLI (printed table + non-zero exit on regression) for
+``scripts/check.sh`` and the standalone CI step:
 
     PYTHONPATH=src python scripts/passes_gate.py
-"""
-from repro.core.wfagg import WFAggConfig, alt_wfagg_config, memory_passes
 
-# (description, cfg, memory_passes kwargs, documented ceiling)
-CHECKS = [
-    ("single-launch indexed gossip round (the default)",
-     WFAggConfig(), dict(include_gather=True, indexed=True), 1),
-    ("single-launch indexed Alt-WFAgg (Gram folded into the stats phase)",
-     alt_wfagg_config(), dict(include_gather=True, indexed=True), 1),
-    ("two-launch indexed fallback",
-     WFAggConfig(backend="fused_two_launch"),
-     dict(include_gather=True, indexed=True), 2),
-    ("fused single-node aggregation (stats + combine)",
-     WFAggConfig(), {}, 2),
-    ("fused single-node Alt-WFAgg (one extra Gram pass)",
-     alt_wfagg_config(), {}, 3),
-    ("fused gathered gossip round (gather + stats + combine)",
-     WFAggConfig(), dict(include_gather=True), 3),
-]
+The full linter (``python -m repro.analysis``) runs the same rule per
+entry alongside the compiled-artifact rules.
+"""
+from repro.analysis import RULES_BY_ID
+from repro.analysis.entry_points import entry_points
 
 
 def main() -> None:
+    rule = RULES_BY_ID["memory-passes"]
+    findings = []
+    for ep in entry_points().values():
+        if ep.passes:
+            # artifacts unused by this config-layer rule: nothing is built
+            findings.extend(rule.run(None, ep))
     failed = []
-    for desc, cfg, kwargs, ceiling in CHECKS:
-        got = memory_passes(cfg, **kwargs)
-        status = "ok" if got <= ceiling else "REGRESSION"
-        print(f"  {desc}: {got} (ceiling {ceiling}) {status}")
-        if got > ceiling:
-            failed.append(desc)
+    for f in findings:
+        d = f.detail
+        status = "ok" if f.severity == "info" else "REGRESSION"
+        print(f"  [{f.entry}] {d['desc']}: {d['got']} "
+              f"(ceiling {d['ceiling']}) {status}")
+        if f.severity == "error":
+            failed.append(d["desc"])
+    if not findings:
+        raise SystemExit("passes_gate: no entry registers a passes row")
     if failed:
         raise SystemExit(
             f"memory_passes regression vs the documented table: {failed}")

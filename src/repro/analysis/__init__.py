@@ -1,0 +1,42 @@
+"""Computation linter: one static-analysis pass over jaxprs, optimized
+HLO, and Pallas block specs.
+
+    PYTHONPATH=src python -m repro.analysis            # lint every entry
+    PYTHONPATH=src python -m repro.analysis --self-test
+    PYTHONPATH=src python -m repro.analysis --configs  # vmem headroom sweep
+
+Rule catalog, severities, suppression syntax and entry-point
+registration: docs/STATIC_ANALYSIS.md.
+"""
+from repro.analysis.artifacts import (
+    Artifacts,
+    BlockInfo,
+    PallasCallInfo,
+    collect_pallas_calls,
+    count_pallas_calls,
+    walk_eqns,
+)
+from repro.analysis.rules import (
+    RULES,
+    RULES_BY_ID,
+    EntryPoint,
+    Finding,
+    Rule,
+    gate_failures,
+    parse_suppressions,
+    run_rules,
+    scan_gather_model_dim,
+    scan_host_transfers_in_while,
+    scan_nkd_buffers,
+)
+from repro.analysis.vmem import config_vmem_report, round_kernel_residency
+
+__all__ = [
+    "Artifacts", "BlockInfo", "PallasCallInfo", "collect_pallas_calls",
+    "count_pallas_calls", "walk_eqns",
+    "RULES", "RULES_BY_ID", "EntryPoint", "Finding", "Rule",
+    "gate_failures", "parse_suppressions", "run_rules",
+    "scan_gather_model_dim", "scan_host_transfers_in_while",
+    "scan_nkd_buffers",
+    "config_vmem_report", "round_kernel_residency",
+]

@@ -1,0 +1,176 @@
+"""``python -m repro.analysis`` — lint the registered entry points.
+
+Exit status is nonzero iff any UNSUPPRESSED error-severity finding
+survives (warnings and info records never fail the gate).  ``--json``
+writes the full machine-readable report (CI uploads it as an artifact
+alongside BENCH_agg.json).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Dict
+
+
+def _lint_entry(entry, suppressions, with_cost: bool) -> Dict[str, Any]:
+    from repro.analysis.artifacts import Artifacts
+    from repro.analysis.rules import run_rules
+    from repro.launch import hlo_analysis as ha
+
+    fn, args = entry.build()
+    artifacts = Artifacts(fn, args)
+    findings = run_rules(artifacts, entry, suppressions)
+    rec: Dict[str, Any] = {
+        "description": entry.description,
+        "expected_launches": entry.expected_launches,
+        "nkd": list(entry.nkd),
+        "suppress": sorted(entry.suppress),
+        "findings": [f.to_json() for f in findings],
+        "pallas": [{
+            "kernel": p.name, "grid": list(p.grid),
+            "block_bytes": p.block_bytes, "scratch_bytes": p.scratch_bytes,
+            "vmem_bytes": p.vmem_bytes(),
+        } for p in artifacts.pallas_calls],
+    }
+    if with_cost:
+        # the absorbed launch/hlo_analysis signals: roofline terms,
+        # top-traffic instructions, trip counts, dead computations
+        cost = ha.analyze(artifacts.hlo, n_devices=1)
+        rec["cost"] = {
+            "flops": cost.flops, "bytes": cost.bytes,
+            "wire_bytes": cost.wire_bytes, "n_while": cost.n_while,
+            "unknown_trip_whiles": cost.unknown_trip_whiles,
+            "trip_counts": cost.trip_counts,
+            "top_bytes": [[b, s] for b, s in (cost.top_bytes or [])[:5]],
+            "top_wire": [[w, s] for w, s in (cost.top_wire or [])[:5]],
+            "dead_computations": cost.dead_computations or [],
+        }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="rule-based static analysis over the repo's compiled "
+                    "artifacts (docs/STATIC_ANALYSIS.md)")
+    ap.add_argument("--entry", action="append", default=None,
+                    help="lint only this entry (repeatable; default all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entries and rules, then exit")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON report here")
+    ap.add_argument("--suppress", action="append", default=[],
+                    metavar="RULE[@ENTRY]",
+                    help="suppress a rule everywhere or for one entry "
+                         "(repeatable)")
+    ap.add_argument("--vmem-ceiling", type=int, default=None,
+                    help="override the per-grid-step VMEM ceiling in bytes "
+                         "(default 16 MiB)")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the hlo_analysis roofline block in the report")
+    ap.add_argument("--configs", action="store_true",
+                    help="also sweep the configs/ model-shape registry and "
+                         "record per-config vmem-budget headroom")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the doctored-fixture self-tests (every rule "
+                         "must fire) and exit")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        from repro.analysis.selftest import main as selftest_main
+        selftest_main()
+        return 0
+
+    from repro.analysis.entry_points import entry_points
+    from repro.analysis.rules import RULES, parse_suppressions
+
+    entries = entry_points()
+    if args.list:
+        print("entries:")
+        for name, e in entries.items():
+            print(f"  {name}: {e.description}")
+        print("rules:")
+        for r in RULES:
+            print(f"  {r.id} [{r.severity}, {r.layer}]: {r.description}")
+        return 0
+
+    if args.entry:
+        unknown = [n for n in args.entry if n not in entries]
+        if unknown:
+            ap.error(f"unknown entries {unknown}; known: {sorted(entries)}")
+        entries = {n: entries[n] for n in args.entry}
+    try:
+        suppressions = parse_suppressions(args.suppress)
+    except ValueError as e:
+        ap.error(str(e))
+
+    import jax
+
+    report: Dict[str, Any] = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "rules": [{"id": r.id, "severity": r.severity, "layer": r.layer}
+                      for r in RULES],
+            "suppress": list(args.suppress),
+        },
+        "entries": {},
+    }
+    all_findings = []
+    for name, entry in entries.items():
+        if args.vmem_ceiling is not None:
+            entry = dataclasses.replace(entry, vmem_ceiling=args.vmem_ceiling)
+        print(f"linting {name} ...", flush=True)
+        rec = _lint_entry(entry, suppressions, with_cost=not args.no_cost)
+        report["entries"][name] = rec
+        for f in rec["findings"]:
+            all_findings.append(f)
+            tag = " (suppressed)" if f["suppressed"] else ""
+            if f["severity"] != "info" or f["suppressed"]:
+                print(f"  {f['severity'].upper()} {f['rule']}{tag}: "
+                      f"{f['message']}")
+            else:
+                print(f"  info {f['rule']}: {f['message']}")
+
+    if args.configs:
+        from repro.analysis.vmem import DEFAULT_VMEM_CEILING, config_vmem_report
+        ceiling = args.vmem_ceiling or DEFAULT_VMEM_CEILING
+        print("sweeping configs/ registry (vmem-budget headroom) ...",
+              flush=True)
+        report["configs"] = config_vmem_report(ceiling=ceiling)
+        for rec in report["configs"]:
+            status = "ok" if rec["ok"] else "OVER BUDGET"
+            print(f"  {rec['arch']}: d={rec['d']:,} grid={rec['grid']} "
+                  f"vmem={rec['vmem_bytes'] / 2**20:.2f} MiB headroom="
+                  f"{100 * rec['headroom_frac']:.0f}% {status}")
+        if any(not rec["ok"] for rec in report["configs"]):
+            all_findings.append({
+                "rule": "vmem-budget", "severity": "error",
+                "entry": "configs", "suppressed": False,
+                "message": "a registry config exceeds the VMEM ceiling",
+                "detail": {}})
+
+    failures = [f for f in all_findings
+                if f["severity"] == "error" and not f["suppressed"]]
+    report["summary"] = {
+        "n_findings": len(all_findings),
+        "n_errors": len(failures),
+        "n_suppressed": sum(1 for f in all_findings if f["suppressed"]),
+        "ok": not failures,
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report -> {args.json}")
+    if failures:
+        print(f"repro.analysis: {len(failures)} unsuppressed error(s)")
+        return 1
+    print(f"repro.analysis: OK ({len(report['entries'])} entries, "
+          f"{len(all_findings)} findings, "
+          f"{report['summary']['n_suppressed']} suppressed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""The registered lint targets.
+
+Every computation the repo ships — the fused one-launch round, the
+two-launch fallback, the valid-aware reference oracle, the
+dynamic-scenario scan, stacked ``robust_allreduce`` mode-B — is
+registered here as an :class:`~repro.analysis.rules.EntryPoint` and gets
+the FULL rule gate on every ``python -m repro.analysis`` run.  A new
+subsystem (shard_map multi-pod round, compressed gossip) inherits the
+gate by adding one entry: a ``build()`` returning its jitted callable
+plus example args, the pinned launch count, and its (N, K, d) triple.
+
+The builders use the same small shapes as the tier-1 tests (N=10 ring,
+K=4 churn slates, the MLP model) so a lint run costs seconds, not the
+paper experiment.  ``memory_passes`` table rows (the absorbed
+``scripts/passes_gate.py``) are distributed over the entries each row
+describes; ``scripts/passes_gate.py`` re-collects them all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+from repro.analysis.rules import EntryPoint
+
+# the MLP classifier the lint entries train: fc1 (784 x 64 + 64) +
+# fc2 (64 x 10 + 10) raveled
+MLP_D = 784 * 64 + 64 + 64 * 10 + 10
+
+_N, _DEGREE, _ROUNDS = 10, 4, 3
+
+
+def _ring_fixture():
+    from repro.core.topology import make_topology
+    from repro.data.synthetic import SyntheticImages
+    from repro.dfl import dynamics as dyn
+
+    topo = make_topology(n_nodes=_N, degree=_DEGREE, n_malicious=2,
+                         kind="ring", seed=0)
+    data = SyntheticImages()
+    sched = dyn.churn_schedule(topo, _ROUNDS, seed=1)
+    return topo, data, sched
+
+
+def _build_dynamic_round(aggregator: str, backend: str):
+    """(fn, args) for one jitted dynamic round under ``backend``."""
+    import jax.numpy as jnp
+
+    from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
+
+    topo, data, sched = _ring_fixture()
+    cfg = DFLConfig(aggregator=aggregator, attack="ipm_100", model="mlp",
+                    wfagg_backend=backend)
+    fn = build_round_fn(cfg, topo, data, dynamic=True)
+    state = init_dfl_state(cfg, topo, degree=sched.width)
+    args = (state, jnp.asarray(sched.neighbor_idx[0]),
+            jnp.asarray(sched.valid[0]), jnp.asarray(sched.malicious[0]))
+    return fn, args
+
+
+def _build_reference_round():
+    """The static round on the ring topology, reference (gathering)
+    backend — the parity oracle, linted with its two gather rules
+    suppressed (materializing the gossip tensor is its job)."""
+    from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
+
+    topo, data, _ = _ring_fixture()
+    cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp",
+                    wfagg_backend="reference")
+    fn = build_round_fn(cfg, topo, data)
+    return fn, (init_dfl_state(cfg, topo),)
+
+
+def _build_dynamic_scan():
+    """The whole-schedule scan ``run_dynamic_experiment`` jits — built by
+    the engine's own ``build_dynamic_scan_fn``, so the linted program IS
+    the experiment driver's."""
+    from repro.dfl.engine import DFLConfig, build_dynamic_scan_fn
+
+    topo, data, sched = _ring_fixture()
+    cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp")
+    state, run, sched_arrays = build_dynamic_scan_fn(cfg, topo, data, sched,
+                                                     n_test=64)
+    return run, (state,) + tuple(sched_arrays)
+
+
+_STACKED_K, _STACKED_D = 6, 24 * 6 + 80
+
+
+def _build_stacked_mode_b():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import wfagg as wf
+    from repro.distributed.robust_allreduce import (
+        RobustAggConfig, init_tree_agg_state, robust_allreduce_stacked)
+
+    K = _STACKED_K
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, 24, 6)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (K, 80))}
+    g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+    cfg = RobustAggConfig(
+        method="wfagg", layout="stacked", backend="fused",
+        wfagg=wf.WFAggConfig(f=1, transient=1, window=2))
+    state = init_tree_agg_state(cfg, K, jax.tree.map(lambda x: x[0], g))
+    fn = jax.jit(lambda grads, st: robust_allreduce_stacked(grads, cfg, st))
+    return fn, (g, state)
+
+
+def _compile_once_probe() -> int:
+    """Drive 5 churn rounds through 5 DIFFERENT graphs and report the
+    trace-cache size — the compile-once claim on live executables (this
+    is the one runtime-layer rule: it executes, the rest only trace)."""
+    import jax.numpy as jnp
+
+    from repro.dfl import dynamics as dyn
+    from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
+
+    topo, data, _ = _ring_fixture()
+    cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp")
+    sched = dyn.churn_schedule(topo, 5, seed=7, p_leave=0.4)
+    fn = build_round_fn(cfg, topo, data, dynamic=True)
+    state = init_dfl_state(cfg, topo, degree=sched.width)
+    for r in range(sched.rounds):
+        state = fn(state, jnp.asarray(sched.neighbor_idx[r]),
+                   jnp.asarray(sched.valid[r]),
+                   jnp.asarray(sched.malicious[r]))
+    return fn._cache_size()
+
+
+@functools.lru_cache(maxsize=1)
+def entry_points() -> Dict[str, EntryPoint]:
+    """Name -> EntryPoint, in lint order."""
+    from repro.core.wfagg import WFAggConfig, alt_wfagg_config
+
+    _, _, sched = _ring_fixture()
+    K = int(sched.width)
+    nkd = (_N, K, MLP_D)
+
+    entries = [
+        EntryPoint(
+            name="one_launch_round",
+            description="fused single-launch dynamic WFAgg round "
+                        "(backend='fused', the default)",
+            build=lambda: _build_dynamic_round("wfagg", "fused"),
+            expected_launches=1, nkd=nkd,
+            compile_once=_compile_once_probe,
+            passes=(("single-launch indexed gossip round (the default)",
+                     WFAggConfig(),
+                     dict(include_gather=True, indexed=True), 1),),
+        ),
+        EntryPoint(
+            name="one_launch_round_alt",
+            description="fused single-launch Alt-WFAgg round (in-kernel "
+                        "Gram + Multi-Krum/Clustering)",
+            build=lambda: _build_dynamic_round("alt_wfagg", "fused"),
+            expected_launches=1, nkd=nkd,
+            passes=(("single-launch indexed Alt-WFAgg (Gram folded into "
+                     "the stats phase)", alt_wfagg_config(),
+                     dict(include_gather=True, indexed=True), 1),),
+        ),
+        EntryPoint(
+            name="two_launch_round",
+            description="two-launch indexed fallback "
+                        "(backend='fused_two_launch', parity path)",
+            build=lambda: _build_dynamic_round("wfagg", "fused_two_launch"),
+            expected_launches=2, nkd=nkd,
+            passes=(("two-launch indexed fallback",
+                     WFAggConfig(backend="fused_two_launch"),
+                     dict(include_gather=True, indexed=True), 2),),
+        ),
+        EntryPoint(
+            name="reference_round",
+            description="valid-aware pure-jnp reference oracle "
+                        "(backend='reference'; gather rules suppressed — "
+                        "materializing the gossip tensor is its job)",
+            build=_build_reference_round,
+            expected_launches=0, nkd=nkd,
+            suppress=frozenset({"no-nkd-buffer", "gather-free-model-dim"}),
+            passes=(("fused gathered gossip round (gather + stats + "
+                     "combine)", WFAggConfig(),
+                     dict(include_gather=True), 3),),
+        ),
+        EntryPoint(
+            name="dynamic_scan",
+            description="whole-schedule lax.scan (run_dynamic_experiment's "
+                        "one jit: rounds + in-scan evaluation)",
+            build=_build_dynamic_scan,
+            expected_launches=1, nkd=nkd,
+        ),
+        EntryPoint(
+            name="stacked_mode_b",
+            description="stacked robust_allreduce mode-B (N=1 identity-"
+                        "slate instance of the round kernel)",
+            build=_build_stacked_mode_b,
+            expected_launches=1, nkd=(1, _STACKED_K, _STACKED_D),
+            passes=(("fused single-node aggregation (stats + combine)",
+                     WFAggConfig(), {}, 2),
+                    ("fused single-node Alt-WFAgg (one extra Gram pass)",
+                     alt_wfagg_config(), {}, 3)),
+        ),
+    ]
+    return {e.name: e for e in entries}

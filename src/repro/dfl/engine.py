@@ -511,20 +511,18 @@ def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
 # dynamic-topology experiments (round-varying schedules)
 # ---------------------------------------------------------------------------
 
-def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
-                           data: SyntheticImages,
-                           schedule: TopologySchedule,
-                           n_test: int = 256) -> Dict[str, Any]:
-    """Run a DFL experiment under a round-varying topology schedule.
+def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
+                          data: SyntheticImages,
+                          schedule: TopologySchedule,
+                          n_test: int = 256):
+    """The ONE-jit schedule scan behind ``run_dynamic_experiment``.
 
-    ONE jit: ``lax.scan`` over the (R, N, K) neighbor-table / valid-mask
-    / (R, N) malicious-mask schedule, with the round function taking all
-    three as traced per-round inputs — the graph and the Byzantine set
-    change every round, the compile happens once.  Per-round accuracy
-    and consistency are computed INSIDE the scan (a DART-style
-    robustness time series), so dynamic scenarios are plottable without
-    host round-trips.  The returned dict keeps ``run_experiment``'s
-    shape (trace / final / series).
+    Returns ``(state, run, sched)``: the initial state, the jitted
+    ``run(state, neighbor_idx, valid, malicious) -> (state, series)``
+    scan, and the schedule's ``(R, N, K)`` / ``(R, N)`` arrays.  Exposed
+    separately so the static-analysis entry registry (``repro.analysis``)
+    lints the EXACT computation the experiment driver runs — same jit,
+    same scan body — not a re-derived lookalike.
     """
     if schedule.n_nodes != topo.n_nodes:
         raise ValueError(
@@ -573,6 +571,27 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
             body, init, (neighbor_idx, valid, malicious))
         return st, out
 
+    return state, run, sched
+
+
+def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
+                           data: SyntheticImages,
+                           schedule: TopologySchedule,
+                           n_test: int = 256) -> Dict[str, Any]:
+    """Run a DFL experiment under a round-varying topology schedule.
+
+    ONE jit: ``lax.scan`` over the (R, N, K) neighbor-table / valid-mask
+    / (R, N) malicious-mask schedule, with the round function taking all
+    three as traced per-round inputs — the graph and the Byzantine set
+    change every round, the compile happens once.  Per-round accuracy
+    and consistency are computed INSIDE the scan (a DART-style
+    robustness time series), so dynamic scenarios are plottable without
+    host round-trips.  The returned dict keeps ``run_experiment``'s
+    shape (trace / final / series).
+    """
+    state, run, sched = build_dynamic_scan_fn(cfg, topo, data, schedule,
+                                              n_test=n_test)
+    ever_mal = jnp.asarray(schedule.malicious.any(axis=0))
     state, (acc_all, acc_benign, r2) = run(state, *sched)
     acc_all = np.asarray(acc_all)
     acc_benign = np.asarray(acc_benign)

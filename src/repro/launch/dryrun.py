@@ -146,6 +146,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "params": cfg.param_count(), "active_params": cfg.active_param_count(),
     }
+    # Gossip-round VMEM headroom at this model size: the fused one-launch
+    # round kernel traced abstractly at d = param_count under the
+    # compiled-TPU block policy (repro.analysis.vmem).  Residency is
+    # d-independent once the model dim is blocked — recording it per
+    # config turns that scaling claim into data the roofline artifacts
+    # carry (see docs/STATIC_ANALYSIS.md, vmem-budget rule).
+    try:
+        from repro.analysis.vmem import config_vmem_report
+        rec["gossip_vmem"] = config_vmem_report(arch=arch)[0]
+    except Exception as e:  # advisory record; never fails the dry-run
+        rec["gossip_vmem"] = {"error": repr(e)}
+
     variant = sp.arch_variant(cfg, shape)
     if param_dtype and variant is not None:
         import dataclasses

@@ -49,6 +49,8 @@ _SHAPE_TOK_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _TRIP_RE = re.compile(r'known_trip_count[^}]*?"?n"?[":\\]+(\d+)')
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CALLED_COMPS_RE = re.compile(r"called_computations=\{([^}]*)\}")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -122,6 +124,10 @@ class HloCost:
     trip_counts: List[int]
     top_bytes: Optional[List[Tuple[float, str]]] = None  # (bytes x mult, instr)
     top_wire: Optional[List[Tuple[float, str]]] = None
+    # computations unreachable from the entry via the parsed call graph:
+    # dead code the compiler kept, or a call-graph edge this analyzer
+    # missed — either way its cost is NOT in the totals, so surface it
+    dead_computations: Optional[List[str]] = None
 
 
 def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
@@ -276,6 +282,12 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
                     return (0.0, ins.out_bytes + operand_bytes(line), 0.0, None)
                 return (0.0, 0.0, 0.0, None)
 
+            if op == "copy-start":
+                # async copy pair: the START moves the buffer (one read +
+                # one write of the operand); its tuple output aliases the
+                # same bytes and copy-done just retires the handle, so
+                # counting out_bytes here would triple-count the transfer
+                return (0.0, 2.0 * operand_bytes(line), 0.0, None)
             base_kind = op[:-6] if op.endswith("-start") else op
             if base_kind in _COLL_KINDS:
                 out_b = ins.out_bytes
@@ -334,6 +346,20 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
         for ins in instrs:
             if ins.opcode == "while":
                 n_while += 1
+            # reducer/comparator computations (reduce, sort, scatter,
+            # select-and-scatter, all-reduce) hang off to_apply= — follow
+            # them so they are reachable, not misreported as dead code
+            mta = _TO_APPLY_RE.search(ins.line)
+            if mta:
+                edges[cname].append((mta.group(1), 1.0, False))
+            # custom-calls (TopK, ...) carry their comparator/helper
+            # computations in called_computations={...}
+            mcc = _CALLED_COMPS_RE.search(ins.line)
+            if mcc:
+                for callee in mcc.group(1).split(","):
+                    callee = callee.strip().lstrip("%")
+                    if callee:
+                        edges[cname].append((callee, 1.0, False))
             fl, by, wi, kind = process(ins, cc=cc, edges_c=edges[cname])
             cc.flops += fl
             cc.bytes += by
@@ -383,6 +409,8 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
                 top_w.append((m * wi, f"x{m:g} {line}"))
     total.top_bytes = sorted(top_b, reverse=True)[:20]
     total.top_wire = sorted(top_w, reverse=True)[:20]
+    total.dead_computations = sorted(
+        c for c in comps if mult.get(c, 0.0) == 0.0 and c != entry)
     return total
 
 
@@ -414,3 +442,68 @@ def _topo_order(edges: Dict[str, List[Tuple[str, float, bool]]],
         visit(c)
     order.reverse()
     return order
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    """CLI: trip-count-aware cost summary of a saved HLO module.
+
+        python -m repro.launch.hlo_analysis module.hlo [--n-devices N]
+                                            [--top K] [--json]
+
+    Prints the roofline totals, the while-loop census (unknown trip
+    counts under-report cost — the `unknown-trip-count` lint rule), the
+    top byte- and wire-heaviest instruction lines, and any computations
+    unreachable from the entry.
+    """
+    import argparse
+    import json as _json
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("hlo", help="path to an HLO module text dump, or - for stdin")
+    ap.add_argument("--n-devices", type=int, default=1)
+    ap.add_argument("--top", type=int, default=5,
+                    help="how many top_bytes/top_wire lines to print")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full record as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    if args.hlo == "-":
+        import sys
+        text = sys.stdin.read()
+    else:
+        with open(args.hlo) as f:
+            text = f.read()
+    c = analyze(text, n_devices=args.n_devices)
+
+    if args.json:
+        print(_json.dumps({
+            "flops": c.flops, "bytes": c.bytes, "wire_bytes": c.wire_bytes,
+            "coll_by_kind": c.coll_by_kind, "n_while": c.n_while,
+            "unknown_trip_whiles": c.unknown_trip_whiles,
+            "trip_counts": c.trip_counts,
+            "top_bytes": c.top_bytes[:args.top] if c.top_bytes else [],
+            "top_wire": c.top_wire[:args.top] if c.top_wire else [],
+            "dead_computations": c.dead_computations or [],
+        }, indent=1))
+        return
+
+    print(f"flops      {c.flops:.4g}")
+    print(f"bytes      {c.bytes:.4g}")
+    print(f"wire_bytes {c.wire_bytes:.4g}")
+    print(f"while loops: {c.n_while} "
+          f"(unknown trip count: {c.unknown_trip_whiles}; "
+          f"trip_counts={c.trip_counts[:16]})")
+    if c.unknown_trip_whiles:
+        print("  WARNING: unknown-trip bodies are multiplied by 1 — "
+              "totals under-report cost")
+    for label, rows in (("top_bytes", c.top_bytes), ("top_wire", c.top_wire)):
+        print(f"{label}:")
+        for val, line in (rows or [])[:args.top]:
+            print(f"  {val:.4g}  {line[:140]}")
+    if c.dead_computations:
+        print(f"dead computations ({len(c.dead_computations)}): "
+              f"{c.dead_computations[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,6 @@ fall back to their local model without NaNs, and the one-jit dynamic
 round must (a) never retrace as the graph changes, (b) stay
 (N, K, d)-free in HLO, and (c) match the per-node reference pipeline
 under a churn schedule."""
-import re
 
 import jax
 import jax.numpy as jnp
@@ -211,7 +210,10 @@ def test_dynamic_round_compiles_once_across_changing_graphs():
 
 def test_dynamic_round_hlo_is_gossip_tensor_free():
     """The dynamic round keeps PR 2's guarantee: no (N, K, d)-shaped f32
-    buffer anywhere in the compiled HLO."""
+    buffer anywhere in the compiled HLO (shared ``repro.analysis``
+    scanner — the ``no-nkd-buffer`` rule's engine)."""
+    from repro.analysis import scan_nkd_buffers
+
     topo = _topo()
     data = SyntheticImages()
     cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp")
@@ -222,8 +224,7 @@ def test_dynamic_round_hlo_is_gossip_tensor_free():
     hlo = fn.lower(state, jnp.asarray(sched.neighbor_idx[0]),
                    jnp.asarray(sched.valid[0]),
                    jnp.asarray(sched.malicious[0])).compile().as_text()
-    hits = sorted(set(re.findall(rf"f32\[{N},{K},\d+\]", hlo)))
-    assert hits == [], hits
+    assert scan_nkd_buffers(hlo, N, K) == []
 
 
 def test_dynamic_engine_rejects_unsupported_configs():

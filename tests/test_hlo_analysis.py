@@ -111,9 +111,10 @@ def test_indexed_wfagg_round_is_gossip_tensor_free():
     allocate ANY (N, K, d)-shaped f32 buffer — the K-fold gossip tensor,
     its padded variants AND the per-edge temporal state are all gone.
     The reference backend still materializes them (sanity check that the
-    pattern actually catches the gather)."""
-    import re
-
+    scanner actually catches the gather).  Asserted through the shared
+    ``repro.analysis.scan_nkd_buffers`` — the same scanner behind the
+    ``no-nkd-buffer`` rule in ``python -m repro.analysis``."""
+    from repro.analysis import scan_nkd_buffers
     from repro.core.topology import paper_topology
     from repro.data.synthetic import SyntheticImages
     from repro.dfl.engine import DFLConfig, build_round_fn, init_dfl_state
@@ -121,7 +122,6 @@ def test_indexed_wfagg_round_is_gossip_tensor_free():
     topo = paper_topology()
     data = SyntheticImages()
     N, K = topo.n_nodes, topo.degree
-    pat = re.compile(rf"f32\[{N},{K},\d+\]")
     hits = {}
     for backend in ("fused", "reference"):
         cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp",
@@ -129,7 +129,7 @@ def test_indexed_wfagg_round_is_gossip_tensor_free():
         state = init_dfl_state(cfg, topo)
         fn = build_round_fn(cfg, topo, data)
         hlo = fn.lower(state).compile().as_text()
-        hits[backend] = sorted(set(pat.findall(hlo)))
+        hits[backend] = scan_nkd_buffers(hlo, N, K)
     assert hits["fused"] == [], hits["fused"]
     assert hits["reference"], "reference round should materialize the gather"
 

@@ -6,8 +6,6 @@ tolerance — across every dynamics scenario (including degree-0
 churned-out rows), irregular erdos_renyi-style degrees, both filter
 families, and the stacked (mode-B) layout; and the jitted round must
 lower to exactly ONE aggregation pallas_call with no (N, K, d) buffer."""
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -225,35 +223,16 @@ def test_reference_backend_degree0_keeps_local():
 # launch-count + HLO assertions
 # ---------------------------------------------------------------------------
 
-def _count_pallas_calls(jaxpr) -> int:
-    """Recursively count pallas_call eqns through all sub-jaxprs."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def subjaxprs(val):
-        if isinstance(val, ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for val in eqn.params.values():
-            for sub in subjaxprs(val):
-                n += _count_pallas_calls(sub)
-    return n
-
-
 @pytest.mark.parametrize("aggregator", ["wfagg", "alt_wfagg"])
 def test_round_is_single_pallas_launch(aggregator):
     """The jitted dynamic round must contain exactly ONE aggregation
     pallas_call under the single-launch backend (the two-launch fallback
     keeps two — sanity check that the counter sees them), and its
-    compiled HLO must stay (N, K, d)-free."""
+    compiled HLO must stay (N, K, d)-free.  Both properties are asserted
+    through the shared ``repro.analysis`` rule API (the same walkers the
+    ``python -m repro.analysis`` gate runs)."""
+    from repro.analysis import count_pallas_calls, scan_nkd_buffers
+
     topo = make_topology(n_nodes=10, degree=4, n_malicious=2, kind="ring",
                          seed=0)
     data = SyntheticImages()
@@ -268,13 +247,12 @@ def test_round_is_single_pallas_launch(aggregator):
         args = (state, jnp.asarray(sched.neighbor_idx[0]),
                 jnp.asarray(sched.valid[0]), jnp.asarray(sched.malicious[0]))
         jaxpr = jax.make_jaxpr(fn)(*args)
-        counts[backend] = _count_pallas_calls(jaxpr.jaxpr)
+        counts[backend] = count_pallas_calls(jaxpr.jaxpr)
         if backend == "fused":
             hlo = fn.lower(*args).compile().as_text()
             # d-sized (N, K, d) buffers only: the alt_wfagg (N, K, K)
             # Gram is a legit O(K^2) statistic, not a gossip tensor
-            hits = sorted({m for m in re.findall(
-                rf"f32\[{N},{K},(\d+)\]", hlo) if int(m) > 16 * K})
+            hits = scan_nkd_buffers(hlo, N, K, min_d=16 * K)
             assert hits == [], hits
     assert counts["fused"] == 1, counts
     assert counts["fused_two_launch"] >= 2, counts
