@@ -9,14 +9,23 @@ src/repro/kernels/README.md for the accounting).  The full-WFAgg rule is
 measured under BOTH backends so the fused-vs-reference pass-count win is
 visible in every run, and every invocation appends its rows to the
 ``BENCH_agg.json`` trajectory so later PRs can regress against it.
+
+Timing methodology (shared with ``repro.obs.profile``): the FIRST call
+— trace + compile + one execution — is reported as its own
+``compile_us`` column; ``us_per_call`` (and the GBps derived from it) is
+the MEDIAN of ``reps`` further calls, each synchronized with its own
+``block_until_ready``.  The old mean-with-one-final-block loop let the
+async dispatch queue smear compile time and cross-call overlap into the
+throughput number.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import statistics
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,25 +37,35 @@ HERE = os.path.dirname(__file__)
 TRAJECTORY = os.path.join(HERE, "BENCH_agg.json")
 
 
-def _timeit(fn, *args, reps: int = 5) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)
+def _timeit(fn, *args, reps: int = 5) -> Tuple[float, float]:
+    """(first-call seconds, median steady-state seconds).  Every call is
+    individually synchronized with ``block_until_ready`` so no sample
+    absorbs its neighbors' device time."""
     t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return compile_s, statistics.median(samples)
 
 
 def _row(rule: str, K: int, d: int, us: float, backend: str,
-         passes: int | None = None, read_factor: float = 1.0) -> Dict:
+         passes: int | None = None, read_factor: float = 1.0,
+         compile_us: float | None = None) -> Dict:
     """``read_factor`` scales the bytes-touched estimate for calls that
-    stream more than one (K, d) tensor (batched launch, +prev input)."""
+    stream more than one (K, d) tensor (batched launch, +prev input).
+    ``us`` must be the steady-state (post-compile) median; the first
+    call goes in ``compile_us``."""
     r = {
         "rule": rule, "K": K, "d": d, "us_per_call": round(us, 1),
         "backend": backend,
         "GBps": round(read_factor * 4e-3 * K * d / max(us, 1e-9), 2),
     }
+    if compile_us is not None:
+        r["compile_us"] = round(compile_us, 1)
     if passes is not None:
         r["passes"] = passes
     return r
@@ -70,17 +89,19 @@ def bench_rules(K: int, d: int) -> List[Dict]:
         "wfagg_e": jax.jit(lambda u: wf.wfagg_e_agg(local, u)),
     }
     for name, fn in cases.items():
-        us = _timeit(fn, updates) * 1e6
-        rows.append(_row(name, K, d, us, "reference"))
+        comp_s, med_s = _timeit(fn, updates)
+        rows.append(_row(name, K, d, med_s * 1e6, "reference",
+                         compile_us=comp_s * 1e6))
 
     # full WFAgg (3 filters + weighting + smoothing), both backends
     for backend in ("reference", "fused"):
         wcfg = wf.WFAggConfig(backend=backend)
         tstate = wf.init_temporal_state(K, d, wcfg.window)
         fn = jax.jit(lambda loc, u, ts, w=wcfg: wf.wfagg(loc, u, ts, w)[0])
-        us = _timeit(fn, local, updates, tstate) * 1e6
-        rows.append(_row(f"wfagg[{backend}]", K, d, us, backend,
-                         passes=wf.memory_passes(wcfg)))
+        comp_s, med_s = _timeit(fn, local, updates, tstate)
+        rows.append(_row(f"wfagg[{backend}]", K, d, med_s * 1e6, backend,
+                         passes=wf.memory_passes(wcfg),
+                         compile_us=comp_s * 1e6))
 
     # batched gossip round over an (N, d) model matrix: the gathered
     # launch materializes the (N, Kb, d) tensor first, the indexed one
@@ -99,11 +120,11 @@ def bench_rules(K: int, d: int) -> List[Dict]:
          jax.jit(lambda m: wf.wfagg_batch(m, m, None, wcfg,
                                           neighbor_idx=nidx)[0])),
     ):
-        us = _timeit(fn, models) * 1e6
-        rows.append(_row(name, Kb, d, us, "fused",
+        comp_s, med_s = _timeit(fn, models)
+        rows.append(_row(name, Kb, d, med_s * 1e6, "fused",
                          passes=wf.memory_passes(wcfg, include_gather=True,
                                                  indexed=indexed),
-                         read_factor=float(N)))
+                         read_factor=float(N), compile_us=comp_s * 1e6))
     return rows
 
 
@@ -150,11 +171,12 @@ def bench_dynamic(K: int, d: int, rounds: int = 4) -> List[Dict]:
     rows = []
     for name, sched in (("wfagg_round[sched-static]", static_sched),
                         ("wfagg_round[sched-dynamic]", dyn_sched)):
-        us = _timeit(run, models, *sched, reps=3) * 1e6 / rounds
-        rows.append(_row(name, Kb, d, us, "fused",
+        comp_s, med_s = _timeit(run, models, *sched, reps=3)
+        rows.append(_row(name, Kb, d, med_s * 1e6 / rounds, "fused",
                          passes=wf.memory_passes(wcfg, include_gather=True,
                                                  indexed=True),
-                         read_factor=float(N)))
+                         read_factor=float(N),
+                         compile_us=comp_s * 1e6))
     return rows
 
 
@@ -194,14 +216,14 @@ def bench_one_launch(K: int, d: int, rounds: int = 4) -> List[Dict]:
             return m
 
         # interpret-mode timings are noisy right after the heavier bench
-        # sections (allocator churn): an extra warm-up call + more reps
-        # keep the one-vs-two-launch comparison honest
-        run(models).block_until_ready()
-        us = _timeit(run, models, reps=5) * 1e6 / rounds
-        rows.append(_row(name, Kb, d, us, backend,
+        # sections (allocator churn): the median over per-call-blocked
+        # reps keeps the one-vs-two-launch comparison honest
+        comp_s, med_s = _timeit(run, models, reps=5)
+        rows.append(_row(name, Kb, d, med_s * 1e6 / rounds, backend,
                          passes=wf.memory_passes(wcfg, include_gather=True,
                                                  indexed=True),
-                         read_factor=float(N)))
+                         read_factor=float(N),
+                         compile_us=comp_s * 1e6))
     return rows
 
 
@@ -245,8 +267,9 @@ def bench_kernels(K: int, d: int) -> List[Dict]:
          lambda: weighted_agg_indexed(models[:N], models, nidx, wbatch)),
         ("weighted_agg[jnp-ref]", "reference", 1.0, lambda: weighted_agg(local, updates, weights, use_kernel=False)),
     ):
-        us = _timeit(fn, reps=3) * 1e6
-        rows.append(_row(name, K, d, us, backend, read_factor=factor))
+        comp_s, med_s = _timeit(fn, reps=3)
+        rows.append(_row(name, K, d, med_s * 1e6, backend,
+                         read_factor=factor, compile_us=comp_s * 1e6))
     return rows
 
 
@@ -289,8 +312,10 @@ def main(argv=None) -> List[Dict]:
             rows += bench_one_launch(K, min(d, 200_000))
     for r in rows:
         passes = f" passes={r['passes']}" if "passes" in r else ""
+        comp = (f" compile={r['compile_us'] / 1e3:8.1f} ms"
+                if "compile_us" in r else "")
         print(f"{r['rule']:28s} K={r['K']:3d} d={r['d']:8d} "
-              f"{r['us_per_call']:10.1f} us  {r['GBps']:7.2f} GB/s"
+              f"{r['us_per_call']:10.1f} us  {r['GBps']:7.2f} GB/s{comp}"
               f"  [{r['backend']}]{passes}")
     if args.out:
         with open(args.out, "w") as f:

@@ -91,7 +91,19 @@ def run_matrix(attacks=DEFAULT_ATTACKS, scenarios=DEFAULT_SCENARIOS,
     accuracy, the final consistency R^2 and the per-round minimum
     accuracy (transient collapse shows up there before it shows up in
     the final round).
+
+    wfagg/alt_wfagg cells additionally run with the flight recorder's
+    decision plane on (``telemetry=True`` — pure traced scan outputs,
+    same launch count) and carry the per-cell FILTER ATTRIBUTION: each
+    filter's mean true-catch / false-positive rates over the attacked
+    rounds, ``carried_by`` (the filter with the best catch-minus-FP
+    margin — which filter actually carried the defense in that attack x
+    scenario cell), and the mean-fallback / degree-0 round counts.  The
+    gate comparator only reads final_acc/final_r2, so the new columns
+    are regression-gate-safe.  See docs/OBSERVABILITY.md.
     """
+    from repro.obs import report as obs_report
+
     topo = make_topology(n_nodes=nodes, degree=degree,
                          n_malicious=malicious, kind=topology,
                          placement=placement, seed=seed)
@@ -107,21 +119,37 @@ def run_matrix(attacks=DEFAULT_ATTACKS, scenarios=DEFAULT_SCENARIOS,
                 cfg = DFLConfig(aggregator=aggregator, attack=attack,
                                 model=model, seed=seed,
                                 wfagg_backend=backend)
+                telemetry = aggregator in ("wfagg", "alt_wfagg")
                 t0 = time.time()
                 out = run_dynamic_experiment(cfg, topo, data, sched,
-                                             n_test=n_test)
+                                             n_test=n_test,
+                                             telemetry=telemetry)
                 acc_series = out["series"]["acc_benign_mean"]
                 cell = {
                     "final_acc": out["final"]["acc_benign_mean"],
                     "final_r2": out["final"]["r_squared"],
                     "min_acc": min(acc_series),
                 }
+                if telemetry:
+                    rates = obs_report.telemetry_rates(out["telemetry"])
+                    attr = obs_report.attribution(rates)
+                    cell["filter_attribution"] = attr
+                    cell["mean_fallback_rounds"] = sum(
+                        1 for c in out["series"]["mean_fallback_count"]
+                        if c > 0)
+                    cell["degree_zero_rounds"] = sum(
+                        1 for c in out["series"]["degree_zero_count"]
+                        if c > 0)
                 cells[cell_key(attack, scenario, aggregator)] = cell
                 if verbose:
+                    carried = (f"  carried by {attr['carried_by'].upper()}"
+                               if telemetry and attr.get("carried_by")
+                               else "")
                     print(f"  {cell_key(attack, scenario, aggregator):40s}"
                           f" acc {100 * cell['final_acc']:6.2f}%"
                           f"  R2 {cell['final_r2']:7.4f}"
-                          f"  [{time.time() - t0:5.1f}s]", flush=True)
+                          f"  [{time.time() - t0:5.1f}s]{carried}",
+                          flush=True)
     meta = dict(attacks=tuple(attacks), scenarios=tuple(scenarios),
                 aggregators=tuple(aggregators), rounds=rounds, nodes=nodes,
                 degree=degree, malicious=malicious, topology=topology,

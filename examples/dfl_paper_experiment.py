@@ -13,7 +13,12 @@ fused|fused_two_launch|reference`` selects the WFAgg execution backend
 collusion`` runs the whole experiment under a round-varying topology
 schedule (one jit, lax.scan over the schedule — the graph and the
 Byzantine set change every round with no retrace) and prints the
-DART-style per-round robustness time series.  Every backend handles
+DART-style per-round robustness time series.  ``--telemetry`` turns on
+the flight recorder's decision plane (repro.obs): per-round per-filter
+true-catch/false-positive rates are printed after the trace, and
+``--events-out``/``--trace-out`` write the JSONL event log and the
+Perfetto trace_event JSON (docs/OBSERVABILITY.md; the full audit lives
+in ``python -m repro.obs.report``).  Every backend handles
 irregular topologies and dynamic scenarios: the fused paths in-kernel,
 the reference backend via the valid-aware pure-jnp oracle — and the
 baseline aggregators (mean/median/trimmed_mean/krum/multi_krum/
@@ -61,7 +66,22 @@ def main() -> None:
                          "under a round-varying neighbor-table schedule "
                          "(see repro.dfl.dynamics.SCENARIOS)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="flight-recorder decision plane: per-filter "
+                         "true-catch/false-positive audit after the "
+                         "trace (docs/OBSERVABILITY.md)")
+    ap.add_argument("--events-out", default="",
+                    help="write the telemetry JSONL event log here "
+                         "(implies --telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="write Perfetto trace_event JSON here — load "
+                         "at ui.perfetto.dev (implies --telemetry)")
     args = ap.parse_args()
+    if args.events_out or args.trace_out:
+        args.telemetry = True
+    if args.telemetry and args.centralized:
+        ap.error("--telemetry records per-edge gossip verdicts; the CFL "
+                 "baseline has no edges")
     if args.scenario:
         if args.centralized:
             ap.error("--scenario is a decentralized (gossip) feature")
@@ -83,10 +103,11 @@ def main() -> None:
     if args.scenario:
         schedule = make_schedule(args.scenario, topo, args.rounds,
                                  seed=args.seed)
-        out = run_dynamic_experiment(cfg, topo, data, schedule)
+        out = run_dynamic_experiment(cfg, topo, data, schedule,
+                                     telemetry=args.telemetry)
     else:
         out = run_experiment(cfg, topo, data, rounds=args.rounds,
-                             eval_every=1)
+                             eval_every=1, telemetry=args.telemetry)
 
     degs = topo.degrees
     print(f"aggregator={args.aggregator} attack={args.attack} "
@@ -120,6 +141,25 @@ def main() -> None:
     for i, a in enumerate(accs):
         marker = " x" if i in mal else "  "
         print(f"  node {i:2d}{marker} {100 * a:6.2f}%  " + "#" * int(40 * a))
+
+    if args.telemetry:
+        from repro.obs import recorder as obs_recorder
+        from repro.obs import report as obs_report
+        from repro.obs import trace as obs_trace
+
+        events = obs_report.events_from_telemetry(
+            out["telemetry"],
+            dict(aggregator=args.aggregator, attack=args.attack,
+                 scenario=args.scenario or "static",
+                 backend=args.backend))
+        print()
+        print(obs_report.render_audit(events))
+        if args.events_out:
+            obs_recorder.write_events(events, args.events_out)
+            print(f"\nwrote event log:     {args.events_out}")
+        if args.trace_out:
+            obs_trace.write_trace(events, args.trace_out)
+            print(f"wrote Perfetto trace: {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -68,7 +68,11 @@ def main() -> None:
         print(f"  {agg:11s} final benign acc "
               f"{100 * out['final']['acc_benign_mean']:6.2f}%")
     print("(The full attack x scenario x aggregator grid: "
-          "PYTHONPATH=src python -m benchmarks.robustness_matrix)")
+          "PYTHONPATH=src python -m benchmarks.robustness_matrix.\n"
+          " To see WHICH filter caught the attack — per-round per-filter "
+          "true-catch/false-positive audit, JSONL event log, Perfetto "
+          "trace — run the flight recorder: PYTHONPATH=src python -m "
+          "repro.obs.report — docs/OBSERVABILITY.md.)")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,15 @@
 #                                      the scenario engine (the CI
 #                                      dynamics job), skipping the full
 #                                      pytest + microbench gate
+#   OBS_SMOKE=1 ./scripts/check.sh     flight-recorder smoke: a small
+#                                      telemetry-on experiment through
+#                                      python -m repro.obs.report, with
+#                                      the JSONL event log validated
+#                                      against the schema and the
+#                                      Perfetto trace written (the CI
+#                                      obs job uploads both as
+#                                      artifacts; OBS_EVENTS/OBS_TRACE
+#                                      override the output paths)
 #
 # The microbench invocation exercises the Pallas kernel paths (fused
 # robust_stats incl. the batched, +prev and schedule-swap variants) at a
@@ -26,6 +35,31 @@ if [[ "${DYNAMICS_SMOKE:-0}" == "1" ]]; then
   python examples/dfl_paper_experiment.py --scenario churn --rounds 3 \
     --model mlp --aggregator wfagg --attack ipm_100
   echo "check.sh: dynamics smoke OK"
+  exit 0
+fi
+
+if [[ "${OBS_SMOKE:-0}" == "1" ]]; then
+  OBS_EVENTS="${OBS_EVENTS:-obs_events.jsonl}"
+  OBS_TRACE="${OBS_TRACE:-obs_trace.json}"
+  python -m repro.obs.report --nodes 10 --degree 4 --rounds 4 --n-test 64 \
+    --out-events "$OBS_EVENTS" --out-trace "$OBS_TRACE"
+  # re-read the files the run wrote: the JSONL must round-trip through
+  # the schema validator and the trace must be well-formed trace_event
+  # JSON (what ui.perfetto.dev parses)
+  python - "$OBS_EVENTS" "$OBS_TRACE" <<'PY'
+import json, sys
+from repro.obs import recorder
+events = recorder.read_events(sys.argv[1])
+recorder.validate_events(events, strict=True)
+trace = json.load(open(sys.argv[2]))
+assert isinstance(trace.get("traceEvents"), list) and trace["traceEvents"], \
+    "empty traceEvents"
+for ev in trace["traceEvents"]:
+    assert ev["ph"] in ("X", "C", "M") and "pid" in ev, ev
+print(f"obs smoke: {len(events)} events, "
+      f"{len(trace['traceEvents'])} trace events — schema OK")
+PY
+  echo "check.sh: obs smoke OK"
   exit 0
 fi
 

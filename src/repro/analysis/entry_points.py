@@ -70,16 +70,21 @@ def _build_reference_round():
     return fn, (init_dfl_state(cfg, topo),)
 
 
-def _build_dynamic_scan():
+def _build_dynamic_scan(telemetry: bool = False):
     """The whole-schedule scan ``run_dynamic_experiment`` jits — built by
     the engine's own ``build_dynamic_scan_fn``, so the linted program IS
-    the experiment driver's."""
+    the experiment driver's.  With ``telemetry`` it is the flight-
+    recorder variant: the scan additionally emits the packed per-round
+    verdict bitmask + per-node summaries (``repro.obs``) as pure traced
+    outputs — same launch count, and the no-host-transfer-in-scan rule
+    must hold over it just like the silent scan."""
     from repro.dfl.engine import DFLConfig, build_dynamic_scan_fn
 
     topo, data, sched = _ring_fixture()
     cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp")
     state, run, sched_arrays = build_dynamic_scan_fn(cfg, topo, data, sched,
-                                                     n_test=64)
+                                                     n_test=64,
+                                                     telemetry=telemetry)
     return run, (state,) + tuple(sched_arrays)
 
 
@@ -185,6 +190,16 @@ def entry_points() -> Dict[str, EntryPoint]:
             description="whole-schedule lax.scan (run_dynamic_experiment's "
                         "one jit: rounds + in-scan evaluation)",
             build=_build_dynamic_scan,
+            expected_launches=1, nkd=nkd,
+        ),
+        EntryPoint(
+            name="dynamic_scan_telemetry",
+            description="the same whole-schedule scan with the flight "
+                        "recorder's decision plane on (telemetry=True): "
+                        "packed verdict bitmasks as pure traced scan "
+                        "outputs — launch count unchanged, no host "
+                        "transfer enters the scan (docs/OBSERVABILITY.md)",
+            build=lambda: _build_dynamic_scan(telemetry=True),
             expected_launches=1, nkd=nkd,
         ),
         EntryPoint(

@@ -39,6 +39,7 @@ from repro.core import trust
 from repro.core import wfagg as wf
 from repro.core.topology import Topology, TopologySchedule
 from repro.data.synthetic import SyntheticImages
+from repro.obs import decision as obs_decision
 from repro.models.lenet import init_lenet, init_mlp_classifier, lenet_fwd, mlp_classifier_fwd
 
 Array = jax.Array
@@ -309,7 +310,7 @@ def _aggregate_one_dyn(cfg: DFLConfig, local: Array, updates: Array,
 # ---------------------------------------------------------------------------
 
 def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
-                   dynamic: bool = False) -> Callable:
+                   dynamic: bool = False, telemetry: bool = False) -> Callable:
     """One jitted DFL round.
 
     ``dynamic=False`` (default): returns ``round_fn(state)`` closed over
@@ -325,6 +326,15 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     ``DYN_AGGREGATORS`` variants (a plain gather + per-node vmap — the
     baseline rows of the robustness matrix, not a kernel path).
 
+    ``telemetry=True``: the round additionally returns a
+    ``repro.obs.DecisionRecord`` — the packed per-edge verdict bitmask
+    plus per-node accepted counts / mean-fallback flags / trust-weight
+    entropy — as a second output: ``round_fn(...) -> (state, record)``.
+    The record is built from masks the round already computes (pure
+    traced jnp, no host callbacks, no extra kernel launch; see
+    docs/OBSERVABILITY.md), so the model trajectory is bit-identical
+    with telemetry on or off.
+
     NOTE: the WFAgg-T ring buffers in ``state.temporal`` are keyed by
     neighbor SLOT.  ``run_dynamic_experiment`` re-keys them to each
     round's slate by neighbor identity (``wf.realign_temporal_history``)
@@ -332,6 +342,10 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
     slate must do the same, or neighbors inherit each other's histories
     when their slot shifts.
     """
+    if telemetry and cfg.centralized:
+        raise NotImplementedError(
+            "telemetry records per-EDGE gossip verdicts; the CFL "
+            "baseline has one server and no edges")
     if dynamic:
         if cfg.centralized:
             raise NotImplementedError("dynamic schedules are a gossip "
@@ -344,7 +358,7 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
                 "gather-free path or the DYN_AGGREGATORS baselines")
         # any wfagg backend works here: the fused paths AND the reference
         # oracle all honor per-round valid masks (dynamic keep counts)
-        return jax.jit(_make_round_core(cfg, data))
+        return jax.jit(_make_round_core(cfg, data, telemetry=telemetry))
 
     neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K) padded
     # None on regular graphs: the indexed kernels then skip the mask and
@@ -360,13 +374,18 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
             "wfagg/alt_wfagg gather-free path or the DYN_AGGREGATORS "
             "baselines")
     malicious = jnp.asarray(topo.malicious)
-    core = _make_round_core(cfg, data)
+    core = _make_round_core(cfg, data, telemetry=telemetry)
     return jax.jit(lambda state: core(state, neighbor_idx, neighbor_valid,
                                       malicious))
 
 
-def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
-    """The round body, parameterized by the per-round topology inputs."""
+def _make_round_core(cfg: DFLConfig, data: SyntheticImages,
+                     telemetry: bool = False) -> Callable:
+    """The round body, parameterized by the per-round topology inputs.
+    With ``telemetry`` the body returns ``(DFLState, DecisionRecord)``;
+    the record is derived from the masks/weights the aggregation already
+    produced (baselines get :func:`repro.obs.record_uniform` — accepted
+    = valid, no filter bits)."""
 
     def round_core(state: DFLState, neighbor_idx: Array,
                    neighbor_valid: Optional[Array],
@@ -383,7 +402,12 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
         view = _defense_view(cfg, state, neighbor_idx, neighbor_valid)
         flat = _apply_attacks(cfg, mal_mask, flat, state.rnd, view)
 
+        record = None
         if cfg.centralized:
+            if telemetry:
+                raise NotImplementedError(
+                    "telemetry records per-EDGE gossip verdicts; the CFL "
+                    "baseline has one server and no edges")
             # one server-side aggregation over all N received models
             t0 = jax.tree.map(lambda x: x[0], state.temporal) if state.temporal is not None else None
             global_prev = prev_flat[0]  # all nodes share the global model in CFL
@@ -400,9 +424,13 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
                 # d-blocks straight from the (N, d) model matrix (the
                 # reference backend gathers, for parity runs)
                 wcfg = _wfagg_full_config(cfg, neighbor_idx.shape[1])
-                new_flat, new_temporal, _ = wf.wfagg_batch(
+                new_flat, new_temporal, info = wf.wfagg_batch(
                     flat, flat, state.temporal, wcfg,
                     neighbor_idx=neighbor_idx, valid=neighbor_valid)
+                if telemetry:
+                    # the indexed info dict carries the full 2-of-3 vote
+                    # (mask_d/mask_c/mask_t/valid/weights) — pack it
+                    record = obs_decision.record_from_info(info)
             elif state.temporal is not None:
                 gathered = flat[neighbor_idx]  # (N, K, d) gossip exchange
                 new_flat, new_temporal = jax.vmap(
@@ -423,9 +451,18 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages) -> Callable:
                     lambda loc, upd: _aggregate_one(cfg, loc, upd, None)
                 )(flat, gathered)
                 new_temporal = None
+            if telemetry and record is None:
+                # baselines have no per-edge filter verdicts: uniform
+                # accept over the valid slate (degree-0 still tracked)
+                valid_all = (neighbor_valid if neighbor_valid is not None
+                             else jnp.ones(neighbor_idx.shape, bool))
+                record = obs_decision.record_uniform(valid_all)
 
         new_params = jax.vmap(unravel_one)(new_flat)
-        return DFLState(new_params, momentum, new_temporal, state.rnd + 1)
+        new_state = DFLState(new_params, momentum, new_temporal, state.rnd + 1)
+        if telemetry:
+            return new_state, record
+        return new_state
 
     return round_core
 
@@ -487,24 +524,85 @@ def _series_from_trace(trace) -> Dict[str, list]:
     }
 
 
+def _telemetry_out(record, neighbor_idx, valid, malicious) -> Dict[str, Any]:
+    """Host-side telemetry bundle: the stacked (R, …) ``DecisionRecord``
+    fields plus the slate context (``(R, N, K)`` tables, ``(R, N)``
+    Byzantine masks) a report needs to split attacker from benign edges
+    (``repro.obs.report.filter_rates``)."""
+    return {
+        "verdict": np.asarray(record.verdict),
+        "accepted": np.asarray(record.accepted),
+        "mean_fallback": np.asarray(record.mean_fallback),
+        "degree_zero": np.asarray(record.degree_zero),
+        "entropy": np.asarray(record.entropy),
+        "neighbor_idx": np.asarray(neighbor_idx),
+        "valid": np.asarray(valid),
+        "malicious": np.asarray(malicious),
+    }
+
+
 def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
-                   rounds: Optional[int] = None, eval_every: int = 1) -> Dict[str, Any]:
+                   rounds: Optional[int] = None, eval_every: int = 1,
+                   telemetry: bool = False) -> Dict[str, Any]:
     """Run a full DFL experiment; returns the per-round metric trace and
-    the columnar ``series`` time series (accuracy, consistency)."""
+    the columnar ``series`` time series (accuracy, consistency).
+
+    Decentralized runs always track the per-node mean-fallback /
+    degree-0 flags (the masks are already computed; a node silently
+    keeping its local model is an event worth a series column) —
+    ``series["mean_fallback_count"]`` / ``series["degree_zero_count"]``
+    per round, plus ``trace[i]["mean_fallback_nodes"]`` at evaluation
+    rounds.  ``telemetry=True`` additionally returns the full
+    per-round/per-edge record under ``out["telemetry"]`` (see
+    ``repro.obs`` / docs/OBSERVABILITY.md).
+    """
     rounds = rounds or cfg.paper.rounds
+    if telemetry and cfg.centralized:
+        raise NotImplementedError(
+            "telemetry records per-EDGE gossip verdicts; the CFL "
+            "baseline has one server and no edges")
+    track = not cfg.centralized
     state = init_dfl_state(cfg, topo)
-    round_fn = build_round_fn(cfg, topo, data)
+    round_fn = build_round_fn(cfg, topo, data, telemetry=track)
     trace = []
+    records = []
+    fallback_counts, degree_zero_counts = [], []
+    mf = None
     for r in range(rounds):
-        state = round_fn(state)
+        if track:
+            state, rec = round_fn(state)
+            mf = np.asarray(rec.mean_fallback)
+            fallback_counts.append(int(mf.sum()))
+            degree_zero_counts.append(int(np.asarray(rec.degree_zero).sum()))
+            if telemetry:
+                records.append(jax.device_get(rec))
+        else:
+            state = round_fn(state)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             e = evaluate(cfg, topo, data, state)
             e["round"] = r + 1
+            if mf is not None:
+                e["mean_fallback_nodes"] = np.flatnonzero(mf).tolist()
             trace.append(e)
-    return {"trace": trace, "final": trace[-1],
-            "series": _series_from_trace(trace),
-            "aggregator": cfg.aggregator,
-            "attack": cfg.attack, "centralized": cfg.centralized}
+    series = _series_from_trace(trace)
+    if track:
+        series["mean_fallback_count"] = fallback_counts
+        series["degree_zero_count"] = degree_zero_counts
+    out = {"trace": trace, "final": trace[-1], "series": series,
+           "aggregator": cfg.aggregator,
+           "attack": cfg.attack, "centralized": cfg.centralized}
+    if telemetry:
+        record = jax.tree.map(lambda *xs: np.stack(xs), *records)
+        R = len(records)
+        nv = (np.ones_like(topo.neighbor_indices, bool)
+              if topo.is_regular else np.asarray(topo.neighbor_valid))
+        out["telemetry"] = _telemetry_out(
+            record,
+            np.broadcast_to(np.asarray(topo.neighbor_indices), (R,) + nv.shape),
+            np.broadcast_to(nv, (R,) + nv.shape),
+            np.broadcast_to(np.asarray(topo.malicious),
+                            (R, topo.n_nodes)))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -514,7 +612,7 @@ def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
 def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
                           data: SyntheticImages,
                           schedule: TopologySchedule,
-                          n_test: int = 256):
+                          n_test: int = 256, telemetry: bool = False):
     """The ONE-jit schedule scan behind ``run_dynamic_experiment``.
 
     Returns ``(state, run, sched)``: the initial state, the jitted
@@ -523,13 +621,21 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
     separately so the static-analysis entry registry (``repro.analysis``)
     lints the EXACT computation the experiment driver runs — same jit,
     same scan body — not a re-derived lookalike.
+
+    ``telemetry=True`` appends the per-round ``DecisionRecord`` to the
+    scan outputs — ``run(...) -> (state, (accs, acc_benign, r2,
+    record))`` with the record's leaves stacked to leading axis R.  The
+    record is a pure traced output of masks the round already computes:
+    no host callback enters the scan body (the ``dynamic_scan_telemetry``
+    lint entry pins launch count and the no-host-transfer rule).
     """
     if schedule.n_nodes != topo.n_nodes:
         raise ValueError(
             f"schedule is for {schedule.n_nodes} nodes, topology has "
             f"{topo.n_nodes}")
     state = init_dfl_state(cfg, topo, degree=schedule.width)
-    round_core = build_round_fn(cfg, topo, data, dynamic=True)
+    round_core = build_round_fn(cfg, topo, data, dynamic=True,
+                                telemetry=telemetry)
     _, fwd = _model_fns(cfg)
     imgs, labels = data.test_set(n_test)
     sched = (jnp.asarray(schedule.neighbor_idx),
@@ -554,7 +660,10 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
                 # history, not whoever held the slot before
                 st = st._replace(temporal=wf.realign_temporal_history(
                     st.temporal, prev_idx, prev_val, idx, val))
-            st = round_core(st, idx, val, mal)
+            if telemetry:
+                st, record = round_core(st, idx, val, mal)
+            else:
+                st = round_core(st, idx, val, mal)
             accs = jax.vmap(
                 lambda p: met.micro_accuracy(fwd(p, imgs), labels)
             )(st.node_params)
@@ -562,8 +671,10 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
             bw = benign.astype(jnp.float32)
             acc_benign = jnp.sum(accs * bw) / jnp.maximum(bw.sum(), 1.0)
             flat, _ = _ravel_nodes(st.node_params)
-            return ((st, idx, val),
-                    (accs, acc_benign, met.r_squared(flat, weights=bw)))
+            out = (accs, acc_benign, met.r_squared(flat, weights=bw))
+            if telemetry:
+                out = out + (record,)
+            return (st, idx, val), out
         # the round-0 "previous" slate is round 0's own (identity match:
         # the buffers are all-zero anyway, any remap is a no-op)
         init = (state, neighbor_idx[0], valid[0])
@@ -577,7 +688,8 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
 def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
                            data: SyntheticImages,
                            schedule: TopologySchedule,
-                           n_test: int = 256) -> Dict[str, Any]:
+                           n_test: int = 256,
+                           telemetry: bool = False) -> Dict[str, Any]:
     """Run a DFL experiment under a round-varying topology schedule.
 
     ONE jit: ``lax.scan`` over the (R, N, K) neighbor-table / valid-mask
@@ -588,11 +700,24 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
     robustness time series), so dynamic scenarios are plottable without
     host round-trips.  The returned dict keeps ``run_experiment``'s
     shape (trace / final / series).
+
+    ``telemetry=True`` turns on the decision plane: the scan emits the
+    per-round (N, K) verdict bitmask + per-node summaries as extra
+    traced outputs, returned under ``out["telemetry"]`` alongside the
+    schedule context, with the mean-fallback / degree-0 / accepted-count
+    time series joined into ``series``.  Model trajectories are
+    bit-identical with telemetry on or off (the record only READS masks
+    the round already computes).
     """
     state, run, sched = build_dynamic_scan_fn(cfg, topo, data, schedule,
-                                              n_test=n_test)
+                                              n_test=n_test,
+                                              telemetry=telemetry)
     ever_mal = jnp.asarray(schedule.malicious.any(axis=0))
-    state, (acc_all, acc_benign, r2) = run(state, *sched)
+    record = None
+    if telemetry:
+        state, (acc_all, acc_benign, r2, record) = run(state, *sched)
+    else:
+        state, (acc_all, acc_benign, r2) = run(state, *sched)
     acc_all = np.asarray(acc_all)
     acc_benign = np.asarray(acc_benign)
     r2 = np.asarray(r2)
@@ -612,6 +737,18 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
     final["round"] = R
     series = _series_from_trace(trace)
     series["degree_min_mean_max"] = schedule.degree_stats().tolist()
-    return {"trace": trace, "final": final, "series": series,
-            "aggregator": cfg.aggregator, "attack": cfg.attack,
-            "centralized": cfg.centralized}
+    out = {"trace": trace, "final": final, "series": series,
+           "aggregator": cfg.aggregator, "attack": cfg.attack,
+           "centralized": cfg.centralized}
+    if record is not None:
+        record = jax.device_get(record)
+        series["mean_fallback_count"] = (
+            np.asarray(record.mean_fallback).sum(axis=1).astype(int).tolist())
+        series["degree_zero_count"] = (
+            np.asarray(record.degree_zero).sum(axis=1).astype(int).tolist())
+        series["accepted_mean"] = [
+            float(x) for x in np.asarray(record.accepted).mean(axis=1)]
+        out["telemetry"] = _telemetry_out(
+            record, schedule.neighbor_idx, schedule.valid,
+            schedule.malicious)
+    return out

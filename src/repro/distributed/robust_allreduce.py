@@ -44,6 +44,7 @@ from repro.core.wfagg import (
     TemporalState, WFAggConfig, wfagg_scores, wfagg_t_decide, wfagg_t_select)
 from repro.kernels.pairwise_dist.ops import pairwise_gram
 from repro.kernels.robust_stats.ops import robust_stats, wfagg_round_indexed
+from repro.obs import decision as obs_decision
 
 Array = jax.Array
 AxisNames = Union[str, Tuple[str, ...]]
@@ -262,6 +263,11 @@ def _weights_from_stats(
             mt = jnp.zeros((K,), bool)
         weights = wfagg_scores(md, mc, mt, w)
         info.update(mask_d=md, mask_c=mc, mask_t=mt)
+        # the flight-recorder decision record (repro.obs): the same
+        # packed verdict bitmask mode-A rounds emit, so a mode-B
+        # all-reduce is auditable by the same report tooling
+        info["record"] = obs_decision.record_from_masks(
+            md, mc, mt, jnp.ones(weights.shape, bool), weights)
     elif cfg.method == "krum":
         scores = _krum_scores_from_gram(stats.gram, w.f)
         weights = jax.nn.one_hot(jnp.argmin(scores), K, dtype=jnp.float32)
@@ -623,6 +629,9 @@ def _stacked_one_launch(
     info = {
         "mask_d": mask_d[0], "mask_c": mask_c[0], "mask_t": mask_t[0],
         "weights": weights[0], "n_accepted": (weights[0] > 0).sum(),
+        "record": obs_decision.record_from_masks(
+            mask_d[0], mask_c[0], mask_t[0],
+            jnp.ones(weights[0].shape, bool), weights[0]),
     }
     return out, new_state, info
 

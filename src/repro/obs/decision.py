@@ -1,0 +1,143 @@
+"""Decision plane: the packed per-edge filter-verdict record.
+
+The WFAgg 2-of-3 vote already computes everything a flight recorder
+needs — the three filter masks, the valid mask and the trust weights —
+the round path just used to throw the ``info`` dict away.  This module
+packs those signals into a fixed-width per-edge **verdict bitmask** plus
+a handful of per-node summaries, all as pure ``jnp`` ops on values the
+round already holds, so the record can ride through ``lax.scan`` as a
+traced output: no host callbacks, no extra kernel launches, and the
+``no-host-transfer-in-scan`` lint stays green (pinned by the
+``dynamic_scan_telemetry`` entry in ``repro.analysis``).
+
+Bit layout of the (…, K) uint8 ``verdict`` (bit SET = the edge passed
+that test; a filter *rejection* is ``valid & ~bit``):
+
+    bit 0  BIT_D         accepted by the distance filter (mask_d)
+    bit 1  BIT_C         accepted by the similarity filter (mask_c)
+    bit 2  BIT_T         accepted by the temporal filter (mask_t)
+    bit 3  BIT_VALID     the edge exists this round (padded slates)
+    bit 4  BIT_ACCEPTED  final verdict: positive trust weight
+
+The packing is bool -> uint8 (never through floats), so the
+``f32-trust-invariant`` lint rule — no sub-f32 downcasts of trust-sized
+buffers — is untouched by construction.  See docs/OBSERVABILITY.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BIT_D = 1 << 0
+BIT_C = 1 << 1
+BIT_T = 1 << 2
+BIT_VALID = 1 << 3
+BIT_ACCEPTED = 1 << 4
+
+#: name -> bit position, for unpacking / reporting
+BITS = {"mask_d": 0, "mask_c": 1, "mask_t": 2, "valid": 3, "accepted": 4}
+
+_EPS = 1e-12
+
+
+class DecisionRecord(NamedTuple):
+    """One round's filter decisions, shaped to scan/stack cleanly.
+
+    Leading axes are whatever the call site carries — ``(N,)`` per-node
+    for a mode-A gossip round, ``()`` for a mode-B all-reduce, ``(R, N)``
+    after a schedule scan stacks R rounds.
+    """
+    verdict: Array        # (..., K) uint8 packed per-edge bitmask
+    accepted: Array       # (...,)   int32 accepted-neighbor count
+    mean_fallback: Array  # (...,)   bool: valid neighbors existed, ALL rejected
+    degree_zero: Array    # (...,)   bool: no valid neighbors at all
+    entropy: Array        # (...,)   f32 entropy (nats) of normalized trust weights
+
+
+def pack_verdict(mask_d: Array, mask_c: Array, mask_t: Array,
+                 valid: Array, accepted: Array) -> Array:
+    """Pack five boolean (…, K) masks into one uint8 bitmask."""
+    u8 = lambda m: m.astype(jnp.uint8)  # noqa: E731 — bool->uint8, no floats
+    return (u8(mask_d)
+            | (u8(mask_c) << 1)
+            | (u8(mask_t) << 2)
+            | (u8(valid) << 3)
+            | (u8(accepted) << 4))
+
+
+def unpack_verdict(verdict) -> Dict[str, "jnp.ndarray"]:
+    """Inverse of :func:`pack_verdict`: name -> boolean array (host side
+    works on numpy arrays too — only >> and & are used)."""
+    return {name: ((verdict >> bit) & 1).astype(bool)
+            for name, bit in BITS.items()}
+
+
+def record_from_masks(mask_d: Array, mask_c: Array, mask_t: Array,
+                      valid: Array, weights: Array) -> DecisionRecord:
+    """Build the record from the raw filter masks + trust weights.
+
+    Shape-polymorphic over leading axes: (K,) mode-B vectors and (N, K)
+    mode-A batches both work.  ``mean_fallback`` means the node HAD valid
+    neighbors but the vote rejected all of them (it silently keeps its
+    local model under the DFL convention — exactly the event satellite 2
+    surfaces); ``degree_zero`` means there was nothing to aggregate in
+    the first place (DoS'd / partitioned away).
+    """
+    valid_b = valid.astype(bool)
+    acc = (weights > 0) & valid_b
+    verdict = pack_verdict(mask_d.astype(bool), mask_c.astype(bool),
+                           mask_t.astype(bool), valid_b, acc)
+    degree = valid_b.sum(axis=-1)
+    n_accepted = acc.sum(axis=-1).astype(jnp.int32)
+    wsum = (weights * valid_b).sum(axis=-1)
+    mean_fallback = (degree > 0) & (wsum <= 0)
+    # entropy of the normalized trust distribution (0*log0 := 0); high =
+    # the vote spread trust evenly, ~0 = one neighbor dominates (or all
+    # rejected, where we define it as 0)
+    p = (weights * valid_b) / jnp.maximum(wsum, _EPS)[..., None]
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, _EPS)), 0.0),
+                   axis=-1)
+    ent = jnp.where(wsum > 0, ent, 0.0).astype(jnp.float32)
+    return DecisionRecord(verdict=verdict, accepted=n_accepted,
+                          mean_fallback=mean_fallback,
+                          degree_zero=degree == 0, entropy=ent)
+
+
+def record_from_info(info: Dict[str, Array],
+                     valid: Optional[Array] = None) -> DecisionRecord:
+    """Build the record from a WFAgg ``info`` dict (``wfagg_batch`` /
+    ``_weights_from_stats`` both emit mask_d/mask_c/mask_t/weights).
+    ``valid`` falls back to info's, then to all-true (regular slates and
+    mode-B identity slates have no padding)."""
+    if valid is None:
+        valid = info.get("valid")
+    w = info["weights"]
+    if valid is None:
+        valid = jnp.ones(w.shape, bool)
+    return record_from_masks(info["mask_d"], info["mask_c"], info["mask_t"],
+                             valid, w)
+
+
+def record_uniform(valid: Array) -> DecisionRecord:
+    """Record for aggregators with no per-edge filter verdicts (mean /
+    median / Krum-family baselines): every valid edge counts as accepted
+    with uniform weight, the three filter bits stay 0 (a report must not
+    read them as rejections — check BIT_ACCEPTED first), and degree-0 is
+    still tracked, which is what the DoS/partition scenarios need."""
+    valid_b = valid.astype(bool)
+    zeros = jnp.zeros(valid_b.shape, bool)
+    verdict = pack_verdict(zeros, zeros, zeros, valid_b, valid_b)
+    degree = valid_b.sum(axis=-1)
+    return DecisionRecord(
+        verdict=verdict,
+        accepted=degree.astype(jnp.int32),
+        mean_fallback=jnp.zeros(degree.shape, bool),
+        degree_zero=degree == 0,
+        entropy=jnp.where(
+            degree > 0, jnp.log(jnp.maximum(degree.astype(jnp.float32), 1.0)),
+            0.0),
+    )

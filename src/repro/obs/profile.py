@@ -1,0 +1,89 @@
+"""Timing plane: compile-vs-steady wall clock, profiler scopes and the
+achieved-bandwidth join against the ``memory_passes`` traffic table.
+
+Everything here is host-side instrumentation AROUND jitted computations
+— nothing in this module enters a traced region, so the decision plane's
+no-host-transfer-in-scan guarantee is untouched.  The one JAX-profiler
+integration is opt-in: :func:`annotate` wraps a round in
+``jax.named_scope`` + ``jax.profiler.TraceAnnotation`` (so device traces
+attribute time to rounds), and :func:`capture` brackets a run with
+``jax.profiler.trace`` for a full TensorBoard/Perfetto device capture on
+TPU runs.
+
+Timing methodology (shared with ``benchmarks/agg_microbench.py``): the
+FIRST call is trace + compile + one execution and is reported as its own
+number; steady state is the median over ``reps`` further calls, each
+individually synchronized with ``block_until_ready`` — an async dispatch
+queue otherwise attributes every round's device time to whichever call
+finally blocks.
+"""
+from __future__ import annotations
+
+import contextlib
+import statistics
+import time
+from typing import Callable, List, NamedTuple, Optional
+
+import jax
+
+
+class TimingResult(NamedTuple):
+    compile_s: float        # first call: trace + compile + one run
+    steady_s: float         # median of the per-call steady-state times
+    steady_all_s: List[float]   # every steady-state sample (reps of them)
+
+
+def time_compile_steady(fn: Callable, *args, reps: int = 5) -> TimingResult:
+    """Time ``fn(*args)``: separate first-call (compile) and median
+    steady-state seconds, each call synchronized with
+    ``block_until_ready``."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return TimingResult(compile_s, statistics.median(samples), samples)
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Name a round for the device profiler: ``jax.named_scope`` tags
+    ops traced inside, ``TraceAnnotation`` marks the host slice so a
+    ``jax.profiler`` capture shows rounds as labelled spans."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def capture(logdir: Optional[str]):
+    """Opt-in device profile capture: wraps the block in
+    ``jax.profiler.trace(logdir)`` when ``logdir`` is set (TPU runs get
+    a full XLA/TraceMe capture loadable in TensorBoard or Perfetto);
+    no-op when falsy, so call sites don't branch."""
+    if not logdir:
+        yield
+        return
+    with jax.profiler.trace(logdir):
+        yield
+
+
+def round_traffic_bytes(wcfg, n_nodes: int, width: int, d: int, *,
+                        indexed: bool = True,
+                        include_gather: bool = True) -> float:
+    """Analytic bytes moved per gossip round: the ``memory_passes``
+    traffic table (src/repro/kernels/README.md) times the candidate
+    bytes one pass streams — N nodes x K candidates x d floats."""
+    from repro.core import wfagg as wf
+
+    passes = wf.memory_passes(wcfg, include_gather=include_gather,
+                              indexed=indexed)
+    return float(passes) * n_nodes * width * d * 4.0
+
+
+def achieved_bytes_per_s(traffic_bytes: float, steady_s: float) -> float:
+    """Achieved HBM-ish bandwidth for one round: analytic traffic over
+    measured steady-state seconds."""
+    return traffic_bytes / max(steady_s, 1e-12)
