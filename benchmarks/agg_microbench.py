@@ -227,6 +227,62 @@ def bench_one_launch(K: int, d: int, rounds: int = 4) -> List[Dict]:
     return rows
 
 
+def _bench_sharded_worker(shards: int, K: int, d: int) -> Dict:
+    """One sharded-round timing row, run INSIDE a subprocess whose
+    XLA_FLAGS already forced ``shards`` virtual host devices (the flag
+    must be set before jax imports, hence the subprocess)."""
+    from repro.distributed import spmd
+
+    N = 8
+    Kb = min(K, N - 1)
+    d_pad = spmd.shard_padded_d(d, max(shards, 1))
+    wcfg = wf.WFAggConfig(backend="fused_two_launch", use_temporal=False)
+    nidx = jnp.asarray(
+        [[(n + o) % N for o in range(1, Kb + 1)] for n in range(N)], jnp.int32)
+    models = jax.random.normal(jax.random.PRNGKey(13), (N, d_pad), jnp.float32)
+    if shards > 1:
+        mesh = spmd.aggregation_mesh(shards)
+        fn = jax.jit(lambda m: spmd.wfagg_batch_sharded(
+            m, m, None, wcfg, nidx, mesh=mesh)[0])
+    else:
+        fn = jax.jit(lambda m: wf.wfagg_batch(
+            m, m, None, wcfg, neighbor_idx=nidx)[0])
+    comp_s, med_s = _timeit(fn, models, reps=3)
+    return _row(f"wfagg_round[sharded-{shards}dev]", Kb, d_pad,
+                med_s * 1e6, "fused_two_launch",
+                passes=wf.memory_passes(wcfg, include_gather=True,
+                                        indexed=True),
+                read_factor=float(N), compile_us=comp_s * 1e6)
+
+
+def bench_sharded(K: int, d: int, shards: int = 8) -> List[Dict]:
+    """The d-sharded gossip round (distributed/spmd.py) vs the same
+    two-launch round single-process, each in its own subprocess so
+    ``--xla_force_host_platform_device_count`` lands before jax loads.
+    Interpret-mode caveat applies: on virtual CPU devices the sharded
+    row measures the shard_map + psum orchestration overhead, not a
+    speedup — the wire-traffic win is what ``python -m repro.analysis``
+    verifies statically."""
+    import subprocess
+    import sys
+
+    rows = []
+    for s in (1, shards):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={s}"
+                            ).strip()
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--sharded-worker", str(s), "--sizes", f"{K}x{d}"],
+            capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            print(f"sharded worker ({s} dev) failed:\n{proc.stderr}")
+            continue
+        rows.append(json.loads(proc.stdout.splitlines()[-1]))
+    return rows
+
+
 def bench_kernels(K: int, d: int) -> List[Dict]:
     from repro.kernels.pairwise_dist.ops import pairwise_sq_dists
     from repro.kernels.robust_stats.ops import (
@@ -295,6 +351,11 @@ def main(argv=None) -> List[Dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="8x100000,16x100000,16x1000000")
     ap.add_argument("--kernels", action="store_true", help="include Pallas paths")
+    ap.add_argument("--sharded", action="store_true",
+                    help="include the d-sharded gossip round (1 vs 8 "
+                         "virtual devices, subprocesses)")
+    ap.add_argument("--sharded-worker", type=int, default=0,
+                    help=argparse.SUPPRESS)  # bench_sharded internal
     ap.add_argument("--out", default="")
     ap.add_argument("--bench-json", default="",
                     help="trajectory file to append to (opt-in — "
@@ -302,6 +363,10 @@ def main(argv=None) -> List[Dict]:
                          "ad-hoc/smoke runs default to not touching the "
                          "committed baseline)")
     args = ap.parse_args(argv)
+    if args.sharded_worker:
+        K, d = (int(x) for x in args.sizes.split(",")[0].split("x"))
+        print(json.dumps(_bench_sharded_worker(args.sharded_worker, K, d)))
+        return []
     rows: List[Dict] = []
     for tok in args.sizes.split(","):
         K, d = (int(x) for x in tok.split("x"))
@@ -310,6 +375,8 @@ def main(argv=None) -> List[Dict]:
             rows += bench_kernels(K, min(d, 200_000))
             rows += bench_dynamic(K, min(d, 200_000))
             rows += bench_one_launch(K, min(d, 200_000))
+        if args.sharded:
+            rows += bench_sharded(K, min(d, 200_000))
     for r in rows:
         passes = f" passes={r['passes']}" if "passes" in r else ""
         comp = (f" compile={r['compile_us'] / 1e3:8.1f} ms"

@@ -18,6 +18,14 @@
 #                                      obs job uploads both as
 #                                      artifacts; OBS_EVENTS/OBS_TRACE
 #                                      override the output paths)
+#   LINT_SPMD=1 ./scripts/check.sh     SPMD communication-contract gate:
+#                                      lint the three sharded entries on
+#                                      8 virtual CPU devices (the CI
+#                                      lint-spmd job; LINT_JSON=<path>
+#                                      writes the report it uploads),
+#                                      then run the 8-device parity +
+#                                      fire checks, skipping the full
+#                                      pytest + microbench gate
 #
 # The microbench invocation exercises the Pallas kernel paths (fused
 # robust_stats incl. the batched, +prev and schedule-swap variants) at a
@@ -60,6 +68,21 @@ print(f"obs smoke: {len(events)} events, "
       f"{len(trace['traceEvents'])} trace events — schema OK")
 PY
   echo "check.sh: obs smoke OK"
+  exit 0
+fi
+
+if [[ "${LINT_SPMD:-0}" == "1" ]]; then
+  # the device-count flag must be in the environment BEFORE jax imports
+  export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8"
+  python -m repro.analysis \
+    --entry sharded_one_launch_round \
+    --entry sharded_dynamic_scan \
+    --entry sharded_stacked_mode_b \
+    ${LINT_JSON:+--json "$LINT_JSON"}
+  for mode in round scan stacked engine gather_fire; do
+    python tests/_spmd_parity_main.py "$mode"
+  done
+  echo "check.sh: spmd lint OK"
   exit 0
 fi
 

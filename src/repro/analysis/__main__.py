@@ -1,9 +1,17 @@
 """``python -m repro.analysis`` — lint the registered entry points.
 
-Exit status is nonzero iff any UNSUPPRESSED error-severity finding
-survives (warnings and info records never fail the gate).  ``--json``
-writes the full machine-readable report (CI uploads it as an artifact
-alongside BENCH_agg.json).
+Exit codes (stable, for CI that gates on the JSON artifact):
+
+  0   no unsuppressed error-severity finding (warnings/info never fail)
+  1   gate failure: at least one unsuppressed error finding
+  2   usage error (argparse: unknown entry, bad --suppress spec, ...)
+
+``--json`` writes the machine-readable report; its top-level
+``schema_version`` bumps whenever the report layout changes shape
+(consumers should pin on it instead of sniffing keys).  Sharded entries
+whose ``min_devices`` exceeds the visible device count are recorded as
+``{"skipped": ...}`` rather than silently dropped — a lint run on a
+1-device box still shows WHICH gates did not run.
 """
 from __future__ import annotations
 
@@ -12,6 +20,9 @@ import dataclasses
 import json
 import sys
 from typing import Any, Dict
+
+# bump when the JSON report layout changes shape
+SCHEMA_VERSION = 2
 
 
 def _lint_entry(entry, suppressions, with_cost: bool) -> Dict[str, Any]:
@@ -34,10 +45,14 @@ def _lint_entry(entry, suppressions, with_cost: bool) -> Dict[str, Any]:
             "vmem_bytes": p.vmem_bytes(),
         } for p in artifacts.pallas_calls],
     }
+    if entry.contract is not None:
+        rec["contract"] = entry.contract.to_dict()
     if with_cost:
         # the absorbed launch/hlo_analysis signals: roofline terms,
-        # top-traffic instructions, trip counts, dead computations
-        cost = ha.analyze(artifacts.hlo, n_devices=1)
+        # top-traffic instructions, trip counts, dead computations —
+        # sharded entries price collectives at their contract's axis size
+        n_dev = entry.contract.axis_size if entry.contract else 1
+        cost = ha.analyze(artifacts.hlo, n_devices=n_dev)
         rec["cost"] = {
             "flops": cost.flops, "bytes": cost.bytes,
             "wire_bytes": cost.wire_bytes, "n_while": cost.n_while,
@@ -46,6 +61,8 @@ def _lint_entry(entry, suppressions, with_cost: bool) -> Dict[str, Any]:
             "top_bytes": [[b, s] for b, s in (cost.top_bytes or [])[:5]],
             "top_wire": [[w, s] for w, s in (cost.top_wire or [])[:5]],
             "dead_computations": cost.dead_computations or [],
+            "num_partitions": cost.num_partitions,
+            "collectives": [r.to_dict() for r in (cost.collectives or [])],
         }
     return rec
 
@@ -108,9 +125,12 @@ def main(argv=None) -> int:
 
     import jax
 
+    n_devices = len(jax.devices())
     report: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
         "meta": {
             "backend": jax.default_backend(),
+            "n_devices": n_devices,
             "rules": [{"id": r.id, "severity": r.severity, "layer": r.layer}
                       for r in RULES],
             "suppress": list(args.suppress),
@@ -119,6 +139,15 @@ def main(argv=None) -> int:
     }
     all_findings = []
     for name, entry in entries.items():
+        if entry.min_devices > n_devices:
+            msg = (f"needs {entry.min_devices} devices, {n_devices} visible "
+                   "— run under XLA_FLAGS=--xla_force_host_platform_"
+                   f"device_count={entry.min_devices} (scripts/check.sh "
+                   "LINT_SPMD=1)")
+            print(f"skipping {name}: {msg}", flush=True)
+            report["entries"][name] = {
+                "description": entry.description, "skipped": msg}
+            continue
         if args.vmem_ceiling is not None:
             entry = dataclasses.replace(entry, vmem_ceiling=args.vmem_ceiling)
         print(f"linting {name} ...", flush=True)

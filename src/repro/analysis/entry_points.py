@@ -20,6 +20,7 @@ from __future__ import annotations
 import functools
 from typing import Dict
 
+from repro.analysis import collectives
 from repro.analysis.rules import EntryPoint
 
 # the MLP classifier the lint entries train: fc1 (784 x 64 + 64) +
@@ -89,6 +90,70 @@ def _build_dynamic_scan(telemetry: bool = False):
 
 
 _STACKED_K, _STACKED_D = 6, 24 * 6 + 80
+
+# sharded entries: shard count and the zero-padded model dim (padding d
+# to a shard multiple is exact — see kernels.common.pad_d)
+_SHARDS = 8
+MLP_D_PAD = MLP_D + (-MLP_D) % _SHARDS
+
+
+def _build_sharded_round():
+    """One sharded gossip round: the two-launch decomposition per shard
+    (local stats, O(N*K) psum, replicated scoring, local combine), the
+    (N, d) state pinned P(None, 'model') at the jit boundary."""
+    from repro.core.wfagg import WFAggConfig
+    from repro.distributed import spmd
+
+    cfg = WFAggConfig(backend="fused_two_launch", f=1, window=3, transient=1)
+    mesh = spmd.aggregation_mesh(_SHARDS)
+    return spmd.sharded_round_jit(cfg, mesh, n=_N, k=_DEGREE, d=MLP_D_PAD)
+
+
+def _build_sharded_scan():
+    """The whole dynamic schedule inside ONE shard_map region: lax.scan
+    carries the (N, d/S) model shard, so the model matrix never crosses
+    the shard_map boundary between rounds."""
+    from repro.core.wfagg import WFAggConfig
+    from repro.distributed import spmd
+
+    cfg = WFAggConfig(backend="fused_two_launch", f=1, window=3, transient=1)
+    mesh = spmd.aggregation_mesh(_SHARDS)
+    return spmd.sharded_scan_jit(cfg, mesh, n=_N, k=_DEGREE, d=MLP_D_PAD,
+                                 rounds=_ROUNDS)
+
+
+def _build_sharded_stacked():
+    """Mode-B stacked allreduce under the (1, 8) mesh via the pure-jnp
+    reference stats (GSPMD-partitionable — no Pallas custom-call for the
+    partitioner to replicate): leaves shard their trailing dim over
+    'model', statistics meet in O(K)/O(K^2) all-reduces."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import wfagg as wf
+    from repro.distributed import spmd
+    from repro.distributed.robust_allreduce import (
+        RobustAggConfig, init_tree_agg_state, robust_allreduce_stacked)
+
+    K = _STACKED_K
+    g = {"w": jnp.zeros((K, 24, _SHARDS), jnp.float32),
+         "b": jnp.zeros((K, 80), jnp.float32)}
+    cfg = RobustAggConfig(
+        method="wfagg", layout="stacked", backend="reference",
+        wfagg=wf.WFAggConfig(f=1, transient=1, window=2))
+    state = init_tree_agg_state(cfg, K, jax.tree.map(lambda x: x[0], g))
+    mesh = spmd.aggregation_mesh(_SHARDS)
+    shardings = {"w": NamedSharding(mesh, P(None, None, "model")),
+                 "b": NamedSharding(mesh, P(None, "model"))}
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, P(*s.spec[1:])),
+                          shardings)
+    st_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                         state)._replace(prev=shardings)
+    fn = jax.jit(lambda grads, st: robust_allreduce_stacked(grads, cfg, st),
+                 in_shardings=(shardings, st_sh),
+                 out_shardings=(out_sh, st_sh, None))
+    return fn, (g, state)
 
 
 def _build_stacked_mode_b():
@@ -212,6 +277,45 @@ def entry_points() -> Dict[str, EntryPoint]:
                      WFAggConfig(), {}, 2),
                     ("fused single-node Alt-WFAgg (one extra Gram pass)",
                      alt_wfagg_config(), {}, 3)),
+        ),
+        EntryPoint(
+            name="sharded_one_launch_round",
+            description="D-sharded gossip round under shard_map over the "
+                        "(1, 8) mesh: per-shard stats launch + O(N*K) "
+                        "psum + shard-local combine launch "
+                        "(distributed/spmd.py; needs 8 devices)",
+            build=_build_sharded_round,
+            expected_launches=2, nkd=(_N, _DEGREE, MLP_D_PAD),
+            contract=collectives.wfagg_round_contract(
+                n=_N, k=_DEGREE, n_shards=_SHARDS, rounds=1),
+            min_devices=_SHARDS,
+            passes=(("sharded round = two-launch shape per shard",
+                     WFAggConfig(backend="fused_two_launch"),
+                     dict(include_gather=True, indexed=True), 2),),
+        ),
+        EntryPoint(
+            name="sharded_dynamic_scan",
+            description="whole dynamic schedule scanned INSIDE the "
+                        "shard_map region — the (N, d/S) shard is the "
+                        "scan carry, with temporal slot-history "
+                        "realignment per round (needs 8 devices)",
+            build=_build_sharded_scan,
+            expected_launches=2, nkd=(_N, _DEGREE, MLP_D_PAD),
+            contract=collectives.wfagg_round_contract(
+                n=_N, k=_DEGREE, n_shards=_SHARDS, rounds=_ROUNDS),
+            min_devices=_SHARDS,
+        ),
+        EntryPoint(
+            name="sharded_stacked_mode_b",
+            description="mode-B stacked allreduce jitted over the (1, 8) "
+                        "mesh via the pure-jnp reference stats (GSPMD-"
+                        "partitionable; statistics meet in O(K^2) "
+                        "all-reduces; needs 8 devices)",
+            build=_build_sharded_stacked,
+            expected_launches=0, nkd=(1, _STACKED_K, 24 * _SHARDS + 80),
+            contract=collectives.stacked_allreduce_contract(
+                k=_STACKED_K, n_shards=_SHARDS),
+            min_devices=_SHARDS,
         ),
     ]
     return {e.name: e for e in entries}

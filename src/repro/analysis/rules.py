@@ -87,6 +87,12 @@ class EntryPoint:
     # the absorbed scripts/passes_gate.py table, distributed over the
     # entries each row describes
     passes: Tuple[Tuple[str, Any, Dict[str, Any], int], ...] = ()
+    # sharded entries: the declared communication contract (collectives.
+    # CommContract) the spmd-* rule family enforces, and the device count
+    # build() needs — the CLI records a skip instead of building when
+    # fewer devices are visible (virtual CPU devices count)
+    contract: Optional[Any] = None
+    min_devices: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -414,6 +420,142 @@ def _check_dead_computation(artifacts: Artifacts, entry: EntryPoint) -> List[Fin
         "missed)", {"computations": dead[:16]})]
 
 
+# ---------------------------------------------------------------------------
+# SPMD communication-contract rules (entries with entry.contract set)
+# ---------------------------------------------------------------------------
+#
+# These read the per-collective records hlo_analysis parses out of the
+# sharded optimized HLO (kind, payload bytes, replica groups, trip-count
+# multiplier) and hold them against the entry's declared CommContract:
+# under a D-sharded mesh the only cross-shard traffic the WFAgg round
+# may emit is the O(N*K) statistic psum — never a model-dim gather.
+
+def _contract_records(artifacts: Artifacts, entry: EntryPoint):
+    from repro.analysis.collectives import contract_cost
+    cost = contract_cost(artifacts, entry.contract.axis_size)
+    return cost, (cost.collectives or [])
+
+
+def _check_spmd_contract(artifacts: Artifacts, entry: EntryPoint) -> List[Finding]:
+    if entry.contract is None:
+        return []
+    ct = entry.contract
+    _, colls = _contract_records(artifacts, entry)
+    findings = []
+    for r in colls:
+        if r.kind not in ct.allowed_kinds:
+            findings.append(Finding(
+                "spmd-collective-contract", "error", entry.name,
+                f"{r.kind} {r.name!r} ({r.out_bytes} B) — contract allows "
+                f"only {ct.allowed_kinds}: GSPMD inserted cross-shard "
+                "traffic the sharded round never declared",
+                {"collective": r.to_dict(), "allowed": list(ct.allowed_kinds)}))
+        elif r.out_bytes > ct.max_collective_bytes:
+            findings.append(Finding(
+                "spmd-collective-contract", "error", entry.name,
+                f"{r.kind} {r.name!r} moves {r.out_bytes} B, over the "
+                f"{ct.max_collective_bytes} B per-collective ceiling — the "
+                "trust-weight reduction is O(N*K); anything bigger is "
+                "model-dim payload on the wire",
+                {"collective": r.to_dict(),
+                 "ceiling": ct.max_collective_bytes}))
+    return findings
+
+
+def _check_spmd_allgather(artifacts: Artifacts, entry: EntryPoint) -> List[Finding]:
+    if entry.contract is None:
+        return []
+    ct = entry.contract
+    _, _, d = entry.nkd
+    # half of one model row's SHARD: generous against O(N*K) psums, far
+    # below any d-sized buffer a boundary all-gather would rebuild
+    min_b = 4 * max(d // max(1, ct.axis_size), 1) // 2
+    findings = []
+    for r in _contract_records(artifacts, entry)[1]:
+        if r.kind in ("all-gather", "all-to-all") and r.out_bytes >= min_b:
+            findings.append(Finding(
+                "spmd-model-dim-allgather", "error", entry.name,
+                f"{r.kind} {r.name!r} rebuilds {r.out_bytes} B of model-dim "
+                f"payload (>= {min_b} B) — a sharded array met a replicated "
+                "consumer and GSPMD un-sharded it; keep (N, d) buffers "
+                "P(None, 'model') end to end",
+                {"collective": r.to_dict(), "min_bytes": min_b}))
+    return findings
+
+
+def _check_spmd_replica_groups(artifacts: Artifacts, entry: EntryPoint) -> List[Finding]:
+    if entry.contract is None:
+        return []
+    ct = entry.contract
+    cost, colls = _contract_records(artifacts, entry)
+    findings = []
+    if cost.num_partitions != ct.axis_size:
+        findings.append(Finding(
+            "spmd-replica-groups", "error", entry.name,
+            f"module compiled with num_partitions={cost.num_partitions}, "
+            f"contract declares a {ct.axis_size}-shard mesh — the entry "
+            "is not actually sharding d",
+            {"num_partitions": cost.num_partitions,
+             "axis_size": ct.axis_size}))
+    for r in colls:
+        if r.group_size <= 1:
+            findings.append(Finding(
+                "spmd-replica-groups", "error", entry.name,
+                f"{r.kind} {r.name!r} has singleton replica groups — a "
+                "dead collective (reduces nothing, still synchronizes)",
+                {"collective": r.to_dict()}))
+            continue
+        if r.covers_mesh(ct.axis_size) is False:
+            findings.append(Finding(
+                "spmd-replica-groups", "error", entry.name,
+                f"{r.kind} {r.name!r} replica groups cover only "
+                f"{sorted(r.participants())} of the {ct.axis_size}-device "
+                "mesh — shards outside the group keep PARTIAL statistics "
+                "and the filters diverge per shard",
+                {"collective": r.to_dict()}))
+    return findings
+
+
+def _check_spmd_wire_budget(artifacts: Artifacts, entry: EntryPoint) -> List[Finding]:
+    if entry.contract is None:
+        return []
+    ct = entry.contract
+    _, colls = _contract_records(artifacts, entry)
+    total = sum(r.mult * r.wire_bytes for r in colls)
+    by_kind: Dict[str, float] = {}
+    for r in colls:
+        by_kind[r.kind] = by_kind.get(r.kind, 0.0) + r.mult * r.wire_bytes
+    detail = {"wire_bytes": total, "budget": ct.wire_budget_bytes,
+              "by_kind": by_kind, "n_collectives": len(colls)}
+    if total > ct.wire_budget_bytes:
+        return [Finding(
+            "spmd-wire-budget", "error", entry.name,
+            f"trip-count-aware per-device wire {total:.4g} B exceeds the "
+            f"contract budget {ct.wire_budget_bytes:.4g} B — a collective "
+            "multiplied into a loop body, or payloads grew past O(N*K)",
+            detail)]
+    return [Finding(
+        "spmd-wire-budget", "info", entry.name,
+        f"per-device wire {total:.4g} B of {ct.wire_budget_bytes:.4g} B "
+        f"budget ({100.0 * total / max(ct.wire_budget_bytes, 1e-9):.0f}%)",
+        detail)]
+
+
+def _check_spmd_nkd(artifacts: Artifacts, entry: EntryPoint) -> List[Finding]:
+    if entry.contract is None:
+        return []
+    n, k, d = entry.nkd
+    d_shard = max(1, d // max(1, entry.contract.axis_size))
+    min_d = max(16 * k, d_shard // 4)
+    hits = scan_nkd_buffers(artifacts.hlo, n, k, min_d=min_d)
+    return [Finding(
+        "spmd-sharded-nkd-buffer", "error", entry.name,
+        f"per-shard (N={n}, K={k}, d/S)-sized f32 buffer(s): d={hits} — "
+        "the gossip tensor re-materialized inside the shard (the indexed "
+        "kernels must DMA neighbor shards, never stack them)",
+        {"d_values": hits, "min_d": min_d})] if hits else []
+
+
 RULES: Tuple[Rule, ...] = (
     Rule("no-nkd-buffer", "error", "hlo",
          "No (N, K, d)-shaped f32 intermediate anywhere in the module, "
@@ -447,6 +589,24 @@ RULES: Tuple[Rule, ...] = (
     Rule("dead-computation", "info", "hlo",
          "Every computation is reachable from the entry.",
          _check_dead_computation),
+    Rule("spmd-collective-contract", "error", "hlo",
+         "Sharded entries emit only the contract's collective kinds, each "
+         "payload under the O(N*K) per-collective ceiling.",
+         _check_spmd_contract),
+    Rule("spmd-model-dim-allgather", "error", "hlo",
+         "No all-gather/all-to-all rebuilds model-dim payload across "
+         "shards (the GSPMD boundary-un-sharding failure mode).",
+         _check_spmd_allgather),
+    Rule("spmd-replica-groups", "error", "hlo",
+         "Collectives cover the declared mesh: no singleton groups, no "
+         "partial-mesh reductions, num_partitions matches the contract.",
+         _check_spmd_replica_groups),
+    Rule("spmd-wire-budget", "error", "hlo",
+         "Trip-count-aware per-device collective wire bytes stay within "
+         "the contract budget.", _check_spmd_wire_budget),
+    Rule("spmd-sharded-nkd-buffer", "error", "hlo",
+         "No per-shard (N, K, d/S) gossip tensor materializes inside the "
+         "sharded module.", _check_spmd_nkd),
 )
 
 RULES_BY_ID: Dict[str, Rule] = {r.id: r for r in RULES}

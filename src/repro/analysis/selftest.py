@@ -296,6 +296,203 @@ ENTRY %main (p.0: f32[4]) -> f32[4] {
            severity="info", why="orphan computation in a doctored module")
 
 
+# ---------------------------------------------------------------------------
+# SPMD communication-contract fixtures: handcrafted sharded modules (the
+# jaxpr layer is empty via Artifacts.from_hlo, which is all these hlo-
+# layer rules need — they run on a 1-device box; the REAL sharded
+# artifacts are linted in tests/test_spmd_analysis.py on 8 virtual
+# devices)
+# ---------------------------------------------------------------------------
+
+_SPMD_NKD = (10, 4, 50896)          # the sharded entries' padded triple
+
+
+def _spmd_contract(rounds: int = 1):
+    from repro.analysis.collectives import wfagg_round_contract
+    return wfagg_round_contract(n=10, k=4, n_shards=8, rounds=rounds)
+
+
+def _spmd_entry(name: str, **kw):
+    return _entry(name, nkd=_SPMD_NKD, contract=_spmd_contract(), **kw)
+
+
+_SPMD_SUM = """\
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(f32[] %a, f32[] %b)
+}
+"""
+
+# the contract-conforming twin: ONE O(N*K) psum over the full mesh
+_SPMD_CLEAN_HLO = f"""\
+HloModule doctored_spmd_clean, num_partitions=8
+
+{_SPMD_SUM}
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4] {{
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %ar = f32[10,4] all-reduce(f32[10,4] %p.0), channel_id=1, replica_groups={{{{0,1,2,3,4,5,6,7}}}}, use_global_device_ids=true, to_apply=%sum
+}}
+"""
+
+
+def _spmd_art(body: str, header: str = "num_partitions=8") -> Artifacts:
+    return Artifacts.from_hlo(
+        f"HloModule doctored_spmd, {header}\n\n{_SPMD_SUM}\n{body}")
+
+
+def test_spmd_collective_contract() -> None:
+    ep = _spmd_entry("spmd-contract")
+    # doctored 1: a replicated candidate matrix forces GSPMD to insert
+    # the full-d all-gather — a kind the contract never allows
+    dirty_kind = _spmd_art("""\
+ENTRY %main (p.0: f32[10,6362]) -> f32[10,50896] {
+  %p.0 = f32[10,6362] parameter(0)
+  ROOT %ag = f32[10,50896] all-gather(f32[10,6362] %p.0), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}, use_global_device_ids=true
+}
+""")
+    _fired("spmd-collective-contract",
+           RULES_BY_ID["spmd-collective-contract"].run(dirty_kind, ep),
+           why="all-gather where the contract allows all-reduce only")
+    # doctored 2: an allowed kind but a model-dim-sized payload
+    dirty_size = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4,128]) -> f32[10,4,128] {
+  %p.0 = f32[10,4,128] parameter(0)
+  ROOT %ar = f32[10,4,128] all-reduce(f32[10,4,128] %p.0), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}, use_global_device_ids=true, to_apply=%sum
+}
+""")
+    _fired("spmd-collective-contract",
+           RULES_BY_ID["spmd-collective-contract"].run(dirty_size, ep),
+           why="all-reduce payload over the O(N*K) ceiling")
+    _quiet("spmd-collective-contract",
+           RULES_BY_ID["spmd-collective-contract"].run(
+               Artifacts.from_hlo(_SPMD_CLEAN_HLO), ep),
+           why="one O(N*K) psum over the full mesh")
+
+
+def test_spmd_model_dim_allgather() -> None:
+    ep = _spmd_entry("spmd-allgather")
+    dirty = _spmd_art("""\
+ENTRY %main (p.0: f32[10,6362]) -> f32[10,50896] {
+  %p.0 = f32[10,6362] parameter(0)
+  ROOT %ag = f32[10,50896] all-gather(f32[10,6362] %p.0), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}, use_global_device_ids=true
+}
+""")
+    _fired("spmd-model-dim-allgather",
+           RULES_BY_ID["spmd-model-dim-allgather"].run(dirty, ep),
+           why="boundary all-gather rebuilding the full-d matrix")
+    _quiet("spmd-model-dim-allgather",
+           RULES_BY_ID["spmd-model-dim-allgather"].run(
+               Artifacts.from_hlo(_SPMD_CLEAN_HLO), ep),
+           why="psum-only module")
+
+
+def test_spmd_replica_groups() -> None:
+    ep = _spmd_entry("spmd-groups")
+    # doctored 1: singleton groups — a dead collective
+    singleton = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4] {
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %ar = f32[10,4] all-reduce(f32[10,4] %p.0), channel_id=1, replica_groups={{0},{1},{2},{3},{4},{5},{6},{7}}, use_global_device_ids=true, to_apply=%sum
+}
+""")
+    _fired("spmd-replica-groups",
+           RULES_BY_ID["spmd-replica-groups"].run(singleton, ep),
+           why="singleton replica groups")
+    # doctored 2: half-mesh groups — the other shards keep partial stats
+    partial = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4] {
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %ar = f32[10,4] all-reduce(f32[10,4] %p.0), channel_id=1, replica_groups={{0,1,2,3}}, use_global_device_ids=true, to_apply=%sum
+}
+""")
+    _fired("spmd-replica-groups",
+           RULES_BY_ID["spmd-replica-groups"].run(partial, ep),
+           why="replica groups cover half the mesh")
+    # doctored 3: module not actually partitioned
+    unsharded = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4] {
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %neg = f32[10,4] negate(f32[10,4] %p.0)
+}
+""", header="num_partitions=1")
+    _fired("spmd-replica-groups",
+           RULES_BY_ID["spmd-replica-groups"].run(unsharded, ep),
+           why="num_partitions=1 against an 8-shard contract")
+    _quiet("spmd-replica-groups",
+           RULES_BY_ID["spmd-replica-groups"].run(
+               Artifacts.from_hlo(_SPMD_CLEAN_HLO), ep),
+           why="full-mesh groups")
+
+
+def test_spmd_wire_budget() -> None:
+    ep = _spmd_entry("spmd-wire")
+    # doctored: the contract prices ONE round, but the psum sits in a
+    # while body the compiler multiplies 1000x
+    dirty = _spmd_art("""\
+%cond (c.1: (s32[], f32[10,4])) -> pred[] {
+  %c.1 = (s32[], f32[10,4]) parameter(0)
+  %i.1 = s32[] get-tuple-element((s32[], f32[10,4]) %c.1), index=0
+  %lim = s32[] constant(1000)
+  ROOT %lt = pred[] compare(s32[] %i.1, s32[] %lim), direction=LT
+}
+
+%body (c.0: (s32[], f32[10,4])) -> (s32[], f32[10,4]) {
+  %c.0 = (s32[], f32[10,4]) parameter(0)
+  %i.0 = s32[] get-tuple-element((s32[], f32[10,4]) %c.0), index=0
+  %x.0 = f32[10,4] get-tuple-element((s32[], f32[10,4]) %c.0), index=1
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i.0, s32[] %one)
+  %ar = f32[10,4] all-reduce(f32[10,4] %x.0), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}, use_global_device_ids=true, to_apply=%sum
+  ROOT %t = (s32[], f32[10,4]) tuple(s32[] %ip, f32[10,4] %ar)
+}
+
+ENTRY %main (p.0: f32[10,4]) -> (s32[], f32[10,4]) {
+  %p.0 = f32[10,4] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[10,4]) tuple(s32[] %zero, f32[10,4] %p.0)
+  ROOT %w = (s32[], f32[10,4]) while((s32[], f32[10,4]) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"1000"}}
+}
+""")
+    _fired("spmd-wire-budget",
+           RULES_BY_ID["spmd-wire-budget"].run(dirty, ep),
+           why="psum multiplied 1000x into a loop body")
+    clean_fs = RULES_BY_ID["spmd-wire-budget"].run(
+        Artifacts.from_hlo(_SPMD_CLEAN_HLO), ep)
+    _quiet("spmd-wire-budget", clean_fs, why="one psum within budget")
+    if not any(f.severity == "info" for f in clean_fs):
+        raise SystemExit("self-test FAILED: spmd-wire-budget emitted no "
+                         "utilization info record on the clean fixture")
+
+
+def test_spmd_sharded_nkd_buffer() -> None:
+    ep = _spmd_entry("spmd-nkd")
+    # doctored: the per-shard (N, K, d/S) gossip tensor re-materialized
+    dirty = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4,6362] {
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %big = f32[10,4,6362] broadcast(f32[10,4] %p.0), dimensions={0,1}
+}
+""")
+    _fired("spmd-sharded-nkd-buffer",
+           RULES_BY_ID["spmd-sharded-nkd-buffer"].run(dirty, ep),
+           why="per-shard (10, 4, 6362) gossip tensor")
+    # the threshold scales with d/S: a (N, K, K)-sized Gram stays legal
+    gram = _spmd_art("""\
+ENTRY %main (p.0: f32[10,4]) -> f32[10,4,4] {
+  %p.0 = f32[10,4] parameter(0)
+  ROOT %g = f32[10,4,4] broadcast(f32[10,4] %p.0), dimensions={0,1}
+}
+""")
+    _quiet("spmd-sharded-nkd-buffer",
+           RULES_BY_ID["spmd-sharded-nkd-buffer"].run(gram, ep),
+           why="O(K^2) Gram exclusion")
+    _quiet("spmd-sharded-nkd-buffer",
+           RULES_BY_ID["spmd-sharded-nkd-buffer"].run(
+               Artifacts.from_hlo(_SPMD_CLEAN_HLO), ep),
+           why="no 3-D buffer at all")
+
+
 def test_suppression_mechanism() -> None:
     import jax
     import jax.numpy as jnp
@@ -320,6 +517,9 @@ def main() -> None:
         test_f32_trust_invariant, test_no_host_transfer_in_scan,
         test_vmem_budget, test_compile_once, test_memory_passes,
         test_unknown_trip_count, test_dead_computation,
+        test_spmd_collective_contract, test_spmd_model_dim_allgather,
+        test_spmd_replica_groups, test_spmd_wire_budget,
+        test_spmd_sharded_nkd_buffer,
         test_suppression_mechanism,
     ]
     print("repro.analysis self-test: every rule must fire on its doctored "

@@ -65,6 +65,13 @@ class DFLConfig:
     # (parity fallback); "reference" is the multi-pass jnp oracle (valid-
     # aware, so irregular and dynamic topologies run under it too).
     wfagg_backend: str = "fused"
+    # > 1 shards the model dimension of the WFAgg gossip round over that
+    # many devices of a (1, S) ('data', 'model') mesh via shard_map
+    # (distributed/spmd.py): per-shard filter statistics, one O(N*K)
+    # psum, shard-local combine.  Requires >= S visible devices; the
+    # round boundary stays replicated (pad/shard/unshard inside), so the
+    # rest of the engine is unchanged.  0/1 = single-process (default).
+    mesh_model_shards: int = 0
 
     def wfagg_config(self, use_temporal=True, backend: Optional[str] = None) -> wf.WFAggConfig:
         p = self.paper
@@ -424,9 +431,16 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages,
                 # d-blocks straight from the (N, d) model matrix (the
                 # reference backend gathers, for parity runs)
                 wcfg = _wfagg_full_config(cfg, neighbor_idx.shape[1])
-                new_flat, new_temporal, info = wf.wfagg_batch(
-                    flat, flat, state.temporal, wcfg,
-                    neighbor_idx=neighbor_idx, valid=neighbor_valid)
+                if cfg.mesh_model_shards > 1:
+                    from repro.distributed import spmd
+                    new_flat, new_temporal, info = spmd.wfagg_batch_sharded(
+                        flat, flat, state.temporal, wcfg,
+                        neighbor_idx, neighbor_valid,
+                        mesh=spmd.aggregation_mesh(cfg.mesh_model_shards))
+                else:
+                    new_flat, new_temporal, info = wf.wfagg_batch(
+                        flat, flat, state.temporal, wcfg,
+                        neighbor_idx=neighbor_idx, valid=neighbor_valid)
                 if telemetry:
                     # the indexed info dict carries the full 2-of-3 vote
                     # (mask_d/mask_c/mask_t/valid/weights) — pack it

@@ -58,6 +58,11 @@ _TRUE_FALSE_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w\.\-]
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+# the FULL brace-list form: replica_groups={{0,1},{2,3},...} — the older
+# _GROUPS_LIST_RE only captures the first group, which is all _group_size
+# needs but not enough for cover-the-mesh / singleton-group checks
+_GROUPS_FULL_RE = re.compile(r"replica_groups=\{(\{[0-9, ]*\}(?:,\s*\{[0-9, ]*\})*)\}")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
 _KERNEL_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
 
 # opcodes that move no HBM bytes at fusion granularity
@@ -114,6 +119,43 @@ class CompCost:
 
 
 @dataclasses.dataclass
+class Collective:
+    """One collective instruction in the module, with its replica-group
+    structure resolved (the per-collective record the SPMD contract
+    rules consume — see repro.analysis.collectives)."""
+    name: str
+    kind: str                 # base kind (async -start folded in)
+    out_bytes: int            # payload bytes (halved for non-AR -start)
+    group_size: int           # devices per replica group
+    n_groups: int
+    groups: Optional[List[List[int]]]  # explicit brace-list groups, if any
+    group_form: str           # "iota" | "list" | "pairs" | "default"
+    wire_bytes: float         # per-device wire bytes, ONE execution
+    mult: float               # call-graph trip-count multiplier
+    line: str
+
+    def participants(self) -> Optional[set]:
+        if self.groups is not None:
+            return {d for g in self.groups for d in g}
+        if self.group_form == "iota":
+            return set(range(self.group_size * self.n_groups))
+        return None
+
+    def covers_mesh(self, n_devices: int) -> Optional[bool]:
+        """Whether every device participates (None if undecidable)."""
+        p = self.participants()
+        return None if p is None else p == set(range(n_devices))
+
+    def to_dict(self) -> Dict:
+        return {
+            "name": self.name, "kind": self.kind,
+            "out_bytes": self.out_bytes, "group_size": self.group_size,
+            "n_groups": self.n_groups, "group_form": self.group_form,
+            "wire_bytes": self.wire_bytes, "mult": self.mult,
+        }
+
+
+@dataclasses.dataclass
 class HloCost:
     flops: float
     bytes: float
@@ -128,6 +170,10 @@ class HloCost:
     # dead code the compiler kept, or a call-graph edge this analyzer
     # missed — either way its cost is NOT in the totals, so surface it
     dead_computations: Optional[List[str]] = None
+    # every collective instruction with resolved replica groups, sorted
+    # by mult x wire_bytes descending (-done halves are skipped)
+    collectives: Optional[List[Collective]] = None
+    num_partitions: int = 1
 
 
 def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
@@ -151,16 +197,32 @@ def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
     return comps, entry
 
 
-def _group_size(line: str, n_devices: int) -> int:
+def parse_replica_groups(line: str, n_devices: int):
+    """(group_form, groups, group_size, n_groups) for one collective.
+
+    ``groups`` is the explicit list-of-lists when the HLO prints the
+    brace form; iota form (``[G,S]<=[...]``) resolves sizes but not
+    membership (participants are still 0..G*S-1); collective-permute's
+    source_target_pairs count as size-2 "pairs"; no annotation means one
+    group over all devices.
+    """
     m = _GROUPS_IOTA_RE.search(line)
     if m:
-        return int(m.group(2))
-    m = _GROUPS_LIST_RE.search(line)
+        n_groups, size = int(m.group(1)), int(m.group(2))
+        return "iota", None, size, n_groups
+    m = _GROUPS_FULL_RE.search(line)
     if m:
-        return max(1, len([s for s in m.group(1).split(",") if s.strip()]))
+        groups = [[int(d) for d in g.split(",") if d.strip()]
+                  for g in re.findall(r"\{([0-9, ]*)\}", m.group(1))]
+        size = max((len(g) for g in groups), default=1)
+        return "list", groups, max(1, size), len(groups)
     if "source_target_pairs=" in line:
-        return 2
-    return n_devices
+        return "pairs", None, 2, 1
+    return "default", None, n_devices, 1
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    return parse_replica_groups(line, n_devices)[2]
 
 
 def _wire_bytes(kind: str, out_b: float, S: int) -> float:
@@ -177,6 +239,8 @@ def _wire_bytes(kind: str, out_b: float, S: int) -> float:
 
 def analyze(hlo: str, n_devices: int) -> HloCost:
     comps, entry = _split_computations(hlo)
+    mnp = _NUM_PARTITIONS_RE.search(hlo[:2000])
+    num_partitions = int(mnp.group(1)) if mnp else 1
 
     # global name -> output type text (names are module-unique in printed HLO)
     shapes: Dict[str, str] = {}
@@ -234,6 +298,7 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
     trip_counts: List[int] = []
     n_while = 0
     instr_recs: Dict[str, list] = {}
+    coll_recs: Dict[str, List[Collective]] = {}
     for cname, instrs in parsed.items():
         cc = CompCost()
         edges[cname] = []
@@ -366,6 +431,16 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
             cc.wire_bytes += wi
             if kind in _COLL_KINDS:
                 cc.coll_by_kind[kind] += wi
+                out_b = ins.out_bytes
+                if ins.opcode.endswith("-start") and kind != "all-reduce":
+                    out_b //= 2
+                form, groups, size, n_groups = parse_replica_groups(
+                    ins.line, n_devices)
+                coll_recs.setdefault(cname, []).append(Collective(
+                    name=ins.name, kind=kind, out_bytes=out_b,
+                    group_size=size, n_groups=n_groups, groups=groups,
+                    group_form=form, wire_bytes=wi, mult=1.0,
+                    line=ins.line.strip()[:200]))
             if by > 1e6 or wi > 1e6:
                 recs.append((by, wi, ins.line.strip()[:160]))
         costs[cname] = cc
@@ -381,7 +456,7 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
                 mult[callee] += mult[cname] * m
 
     total = HloCost(0.0, 0.0, 0.0, {k: 0.0 for k in _COLL_KINDS},
-                    n_while, 0, trip_counts)
+                    n_while, 0, trip_counts, num_partitions=num_partitions)
     for cname, cc in costs.items():
         m = mult.get(cname, 0.0)
         if m == 0.0 and cname != entry:
@@ -411,6 +486,13 @@ def analyze(hlo: str, n_devices: int) -> HloCost:
     total.top_wire = sorted(top_w, reverse=True)[:20]
     total.dead_computations = sorted(
         c for c in comps if mult.get(c, 0.0) == 0.0 and c != entry)
+    colls: List[Collective] = []
+    for cname, crs in coll_recs.items():
+        m = mult.get(cname, 0.0)
+        for rec in crs:
+            colls.append(dataclasses.replace(rec, mult=m))
+    total.collectives = sorted(colls, key=lambda r: r.mult * r.wire_bytes,
+                               reverse=True)
     return total
 
 
@@ -452,8 +534,12 @@ def main(argv: Optional[List[str]] = None) -> None:
 
     Prints the roofline totals, the while-loop census (unknown trip
     counts under-report cost — the `unknown-trip-count` lint rule), the
-    top byte- and wire-heaviest instruction lines, and any computations
-    unreachable from the entry.
+    top byte- and wire-heaviest instruction lines, any computations
+    unreachable from the entry, and — for sharded modules — the
+    per-collective wire-byte table (kind, payload, replica groups,
+    trip-count multiplier) plus the mesh/replica-group summary the SPMD
+    contract rules reason over (``top_wire`` alone only surfaces
+    megabyte-scale movers, which tiny per-round psums never are).
     """
     import argparse
     import json as _json
@@ -473,7 +559,12 @@ def main(argv: Optional[List[str]] = None) -> None:
     else:
         with open(args.hlo) as f:
             text = f.read()
-    c = analyze(text, n_devices=args.n_devices)
+    n_dev = args.n_devices
+    c = analyze(text, n_devices=n_dev)
+    if n_dev == 1 and c.num_partitions > 1:
+        # sharded module: price collectives over its own partition count
+        n_dev = c.num_partitions
+        c = analyze(text, n_devices=n_dev)
 
     if args.json:
         print(_json.dumps({
@@ -484,6 +575,8 @@ def main(argv: Optional[List[str]] = None) -> None:
             "top_bytes": c.top_bytes[:args.top] if c.top_bytes else [],
             "top_wire": c.top_wire[:args.top] if c.top_wire else [],
             "dead_computations": c.dead_computations or [],
+            "num_partitions": c.num_partitions,
+            "collectives": [r.to_dict() for r in c.collectives or []],
         }, indent=1))
         return
 
@@ -503,6 +596,26 @@ def main(argv: Optional[List[str]] = None) -> None:
     if c.dead_computations:
         print(f"dead computations ({len(c.dead_computations)}): "
               f"{c.dead_computations[:8]}")
+
+    colls = c.collectives or []
+    if colls:
+        print(f"collectives ({len(colls)} instrs, "
+              f"num_partitions={c.num_partitions}):")
+        print(f"  {'kind':<19}{'payload_B':>10}{'groups':>12}"
+              f"{'wire_B/dev':>12}{'mult':>7}  name")
+        for r in colls[:max(args.top, 8)]:
+            g = f"{r.n_groups}x{r.group_size}"
+            print(f"  {r.kind:<19}{r.out_bytes:>10}{g:>12}"
+                  f"{r.wire_bytes:>12.4g}{r.mult:>7g}  {r.name}")
+        n_single = sum(1 for r in colls if r.group_size <= 1)
+        cover = [r.covers_mesh(n_dev) for r in colls]
+        n_partial = sum(1 for x in cover if x is False)
+        n_unknown = sum(1 for x in cover if x is None)
+        wire = sum(r.mult * r.wire_bytes for r in colls)
+        print(f"  replica-group summary: "
+              f"{n_single} singleton-group, {n_partial} partial-mesh, "
+              f"{n_unknown} undecidable; "
+              f"collective wire (xmult) = {wire:.4g} B/device")
 
 
 if __name__ == "__main__":
