@@ -18,6 +18,15 @@
 #                                      obs job uploads both as
 #                                      artifacts; OBS_EVENTS/OBS_TRACE
 #                                      override the output paths)
+#   CHAOS_SMOKE=1 ./scripts/check.sh   chaos-transport smoke: the fault
+#                                      x intensity degradation smoke
+#                                      grid (drop/chaos x none/alie x
+#                                      mean/wfagg) through
+#                                      benchmarks.chaos_matrix, with
+#                                      the degradation-curve JSON
+#                                      written for the CI chaos-smoke
+#                                      job to upload (CHAOS_JSON
+#                                      overrides the output path)
 #   LINT_SPMD=1 ./scripts/check.sh     SPMD communication-contract gate:
 #                                      lint the three sharded entries on
 #                                      8 virtual CPU devices (the CI
@@ -68,6 +77,17 @@ print(f"obs smoke: {len(events)} events, "
       f"{len(trace['traceEvents'])} trace events — schema OK")
 PY
   echo "check.sh: obs smoke OK"
+  exit 0
+fi
+
+if [[ "${CHAOS_SMOKE:-0}" == "1" ]]; then
+  CHAOS_JSON="${CHAOS_JSON:-chaos_matrix.json}"
+  python -m benchmarks.chaos_matrix --smoke --out "$CHAOS_JSON"
+  # the chaos lint entry: fault-injected dynamic scan must still be one
+  # launch with no in-scan host transfer (the stacked-ring delivery
+  # trick's whole point)
+  python -m repro.analysis --entry chaos_scan
+  echo "check.sh: chaos smoke OK"
   exit 0
 fi
 

@@ -16,6 +16,16 @@ on the FRESH numbers, not just relative to the baseline:
     static scenario under EVERY attack in the grid (the robustness
     claim itself).
 
+When the baseline carries a ``"chaos"`` block (the fault-injection
+subgrid of ``benchmarks.chaos_matrix.CHAOS_GATE``), the gate also
+re-runs it and enforces the graceful-degradation claims of
+docs/FAULTS.md on the fresh numbers: WFAgg under a 0.3 drop rate and
+under a 0.3 corrupt rate (no attack) stays within ``CHAOS_WFAGG_TOL``
+of its fault-free anchor, while plain mean loses at least
+``CHAOS_MEAN_DEGRADE_MIN`` under the same transport — both sides, so a
+fault injection that silently stops biting fails the gate just like a
+defense that collapses.
+
 Run via ``scripts/check.sh`` (and as its own CI step):
 
     PYTHONPATH=src python scripts/robustness_gate.py
@@ -64,6 +74,18 @@ DEGRADE_MIN = 0.08
 # WFAgg's static-scenario accuracy under every attack must stay within
 # this of its own attack-free static cell.
 WFAGG_STATIC_TOL = 0.06
+# Chaos-transport graceful-degradation claims (the "chaos" block of the
+# baseline, docs/FAULTS.md).  WFAgg under a 0.3 drop rate / 0.3 corrupt
+# rate with no attack must stay within this of its own fault-free
+# anchor...
+CHAOS_WFAGG_TOL = 0.06
+# ...while plain mean must measurably degrade under the same transport:
+# at least this much final accuracy lost vs ITS fault-free anchor
+# (measured on the committed grid: drop costs mean ~0.12, corrupt ~0.46
+# — the threshold sits well under both, and far above seed wiggle).
+CHAOS_MEAN_DEGRADE_MIN = 0.08
+# The fault kinds the structural chaos claims quantify over.
+CHAOS_CLAIM_FAULTS = ("drop", "corrupt")
 
 _BASELINE_AGGS = ("mean", "median", "trimmed_mean", "krum", "multi_krum",
                   "clustering")
@@ -129,6 +151,60 @@ def compare(baseline: dict, fresh_cells: dict) -> list:
     return failures
 
 
+def compare_chaos(baseline_chaos: dict, fresh_cells: dict) -> list:
+    """Gate failures of the chaos (fault-injection) subgrid: per-cell
+    regression vs the committed ``"chaos"`` block, plus the structural
+    graceful-degradation claims on the FRESH numbers."""
+    from benchmarks.chaos_matrix import base_key, cell_key
+
+    meta = baseline_chaos["meta"]
+    failures = []
+    for key, base in baseline_chaos["cells"].items():
+        cell = fresh_cells.get(key)
+        if cell is None:
+            failures.append(f"missing chaos cell {key}")
+            continue
+        if cell["final_acc"] < base["final_acc"] - TOL_ACC:
+            failures.append(
+                f"chaos {key}: final_acc {cell['final_acc']:.4f} < baseline "
+                f"{base['final_acc']:.4f} - {TOL_ACC}")
+        if cell["final_r2"] < base["final_r2"] - TOL_R2:
+            failures.append(
+                f"chaos {key}: final_r2 {cell['final_r2']:.4f} < baseline "
+                f"{base['final_r2']:.4f} - {TOL_R2}")
+
+    # structural claim: under each claimed fault kind at 0.3 intensity
+    # with no attack, wfagg holds its fault-free anchor while mean
+    # measurably degrades from its own — graceful degradation is a
+    # RELATIVE property, so both sides are enforced on fresh numbers
+    intensity = max(float(i) for i in meta["intensities"])
+    for fault in CHAOS_CLAIM_FAULTS:
+        if fault not in meta["faults"]:
+            continue
+        wf_clean = fresh_cells.get(base_key("none", "wfagg"))
+        wf_hit = fresh_cells.get(cell_key(fault, intensity, "none", "wfagg"))
+        if wf_clean and wf_hit and (
+                wf_hit["final_acc"]
+                < wf_clean["final_acc"] - CHAOS_WFAGG_TOL):
+            failures.append(
+                f"wfagg under {fault}@{intensity:g} (no attack): final_acc "
+                f"{wf_hit['final_acc']:.4f} more than {CHAOS_WFAGG_TOL} "
+                f"below its fault-free {wf_clean['final_acc']:.4f} — the "
+                "graceful-degradation claim broke")
+        mn_clean = fresh_cells.get(base_key("none", "mean"))
+        mn_hit = fresh_cells.get(cell_key(fault, intensity, "none", "mean"))
+        if mn_clean and mn_hit and (
+                mn_hit["final_acc"]
+                > mn_clean["final_acc"] - CHAOS_MEAN_DEGRADE_MIN):
+            failures.append(
+                f"mean under {fault}@{intensity:g} (no attack): final_acc "
+                f"{mn_hit['final_acc']:.4f} within {CHAOS_MEAN_DEGRADE_MIN} "
+                f"of its fault-free {mn_clean['final_acc']:.4f} — the fault "
+                "injection stopped biting the unprotected baseline (the "
+                "claim would measure nothing)")
+    return failures
+
+
 def self_test(baseline: dict) -> None:
     """Prove the comparator fails when mean is substituted for WFAgg
     under ipm_100 (mean collapses under IPM; the doctored 'fresh' run
@@ -159,6 +235,34 @@ def self_test(baseline: dict) -> None:
         raise SystemExit("self-test FAILED: the committed baseline does "
                          f"not pass against itself: {residual}")
     print("self-test: baseline passes against itself")
+
+    chaos = baseline.get("chaos")
+    if chaos:
+        from benchmarks.chaos_matrix import base_key, cell_key
+        # doctor the chaos block both ways: pretend wfagg collapsed under
+        # drops (swap in mean's dropped cell) AND pretend mean stopped
+        # degrading (swap in its own fault-free anchor) — the comparator
+        # must reject each side of the graceful-degradation claim
+        intensity = max(float(i) for i in chaos["meta"]["intensities"])
+        doctored = dict(chaos["cells"])
+        doctored[cell_key("drop", intensity, "none", "wfagg")] = \
+            doctored[cell_key("drop", intensity, "none", "mean")]
+        doctored[cell_key("drop", intensity, "none", "mean")] = \
+            doctored[base_key("none", "mean")]
+        chaos_failures = compare_chaos(chaos, doctored)
+        if len(chaos_failures) < 2:
+            raise SystemExit(
+                "self-test FAILED: the chaos comparator accepted a wfagg "
+                "collapse and/or a no-op fault injection: "
+                f"{chaos_failures}")
+        print(f"self-test: doctored chaos block rejected with "
+              f"{len(chaos_failures)} failure(s), e.g.:")
+        print(f"  {chaos_failures[0]}")
+        residual = compare_chaos(chaos, chaos["cells"])
+        if residual:
+            raise SystemExit("self-test FAILED: the committed chaos block "
+                             f"does not pass against itself: {residual}")
+        print("self-test: chaos block passes against itself")
     print("robustness_gate self-test: OK")
 
 
@@ -182,14 +286,24 @@ def main(argv=None) -> None:
     fresh = run_matrix(meta.pop("attacks"), meta.pop("scenarios"),
                        meta.pop("aggregators"), **meta)
     failures = compare(baseline, fresh["cells"])
+    if "chaos" in baseline:
+        from benchmarks.chaos_matrix import run_matrix as run_chaos_matrix
+        cmeta = dict(baseline["chaos"]["meta"])
+        cmeta.pop("wall_s", None)
+        fresh_chaos = run_chaos_matrix(
+            cmeta.pop("faults"), cmeta.pop("intensities"),
+            cmeta.pop("attacks"), cmeta.pop("aggregators"), **cmeta)
+        failures += compare_chaos(baseline["chaos"], fresh_chaos["cells"])
     if failures:
         for fail in failures:
             print(f"  REGRESSION {fail}")
         raise SystemExit(
             f"robustness_gate: {len(failures)} regression(s) vs "
             f"{os.path.relpath(args.baseline)}")
-    print(f"robustness_gate: OK ({len(baseline['cells'])} cells within "
-          f"tolerance, structural claims hold)")
+    n_cells = len(baseline["cells"]) + len(
+        baseline.get("chaos", {}).get("cells", ()))
+    print(f"robustness_gate: OK ({n_cells} cells within tolerance, "
+          f"structural claims hold)")
 
 
 if __name__ == "__main__":

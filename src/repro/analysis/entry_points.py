@@ -89,6 +89,26 @@ def _build_dynamic_scan(telemetry: bool = False):
     return run, (state,) + tuple(sched_arrays)
 
 
+def _build_chaos_scan():
+    """The fault-injected whole-schedule scan (chaos transport): drop +
+    stale + duplicate + corrupt + crash-restart schedules riding as five
+    extra scan stacks, the stale-delivery ring and corrupt bank folded
+    into ONE stacked 2-D model matrix per round (``repro.dfl.faults``).
+    Acceptance gate for docs/FAULTS.md: launch count identical to the
+    clean scan (still the single fused round launch), and no host
+    transfer enters the scan — the fault path must cost zero extra
+    kernel launches and zero recompiles."""
+    from repro.dfl import faults as flt
+    from repro.dfl.engine import DFLConfig, build_dynamic_scan_fn
+
+    topo, data, sched = _ring_fixture()
+    cfg = DFLConfig(aggregator="wfagg", attack="ipm_100", model="mlp")
+    fs = flt.make_fault_schedule("chaos", sched, 0.4, seed=2)
+    carry0, run, arrays = build_dynamic_scan_fn(
+        cfg, topo, data, sched, n_test=64, telemetry=True, faults=fs)
+    return run, (carry0,) + tuple(arrays)
+
+
 _STACKED_K, _STACKED_D = 6, 24 * 6 + 80
 
 # sharded entries: shard count and the zero-padded model dim (padding d
@@ -265,6 +285,17 @@ def entry_points() -> Dict[str, EntryPoint]:
                         "outputs — launch count unchanged, no host "
                         "transfer enters the scan (docs/OBSERVABILITY.md)",
             build=lambda: _build_dynamic_scan(telemetry=True),
+            expected_launches=1, nkd=nkd,
+        ),
+        EntryPoint(
+            name="chaos_scan",
+            description="the fault-injected whole-schedule scan: drop/"
+                        "stale/duplicate/corrupt/crash fault stacks + the "
+                        "stale-delivery ring as scan carry, telemetry on "
+                        "— one compile, launch count unchanged vs the "
+                        "clean scan, no in-scan host transfer "
+                        "(docs/FAULTS.md)",
+            build=_build_chaos_scan,
             expected_launches=1, nkd=nkd,
         ),
         EntryPoint(

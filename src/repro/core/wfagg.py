@@ -85,6 +85,13 @@ class WFAggConfig:
     # fallback), or "reference" (plain-jnp multi-pass pipeline).  Same
     # masks/aggregate up to float tolerance; see memory_passes().
     backend: str = "fused"
+    # Non-finite payload sanitizer (chaos transport, dfl/faults.py): a
+    # NaN/Inf candidate row is zeroed and its edges demoted to invalid
+    # BEFORE any filter statistic on every backend — the indexed
+    # kernel's median/mean must never see a NaN (0 * NaN = NaN would
+    # otherwise leak through even a zero combine weight).  A no-op on
+    # finite inputs (bit-exact), so it defaults on.
+    sanitize: bool = True
 
     @property
     def accept_threshold(self) -> float:
@@ -342,6 +349,7 @@ def wfagg_batch(
     cfg: WFAggConfig,
     neighbor_idx: Optional[Array] = None,
     valid: Optional[Array] = None,
+    prev_idx: Optional[Array] = None,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Batched full WFAgg over all N receiving nodes of a gossip round.
 
@@ -364,11 +372,17 @@ def wfagg_batch(
     (None = regular); the temporal ``prev`` state may be per-edge
     (N, K, d) or a previous-round model matrix (M, d) read through the
     same index table (in which case the new state stays a matrix and the
-    round is (N, K, d)-free end to end).
+    round is (N, K, d)-free end to end).  ``prev_idx (N, K)`` points the
+    matrix-form temporal ``prev`` at rows OTHER than the live neighbor
+    table — the chaos transport's staleness re-keying (dfl/faults.py),
+    where the payload an edge served last round need not be the row it
+    reads this round.
     """
     if neighbor_idx is not None:
         return _wfagg_batch_indexed(local, updates, state, cfg,
-                                    neighbor_idx, valid)
+                                    neighbor_idx, valid, prev_idx)
+    if prev_idx is not None:
+        raise ValueError("prev_idx requires neighbor_idx (indexed path)")
     if valid is not None:
         raise ValueError("valid requires neighbor_idx (padded indexed path)")
     if cfg.backend == "reference":
@@ -481,6 +495,7 @@ def _wfagg_batch_indexed(
     cfg: WFAggConfig,
     neighbor_idx: Array,
     valid: Optional[Array],
+    prev_idx: Optional[Array] = None,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Gather-free batched WFAgg.
 
@@ -493,20 +508,38 @@ def _wfagg_batch_indexed(
     with a ``valid`` mask it runs the valid-aware multi-pass pipeline
     (same dynamic keep counts as the fused paths), without one it keeps
     the bit-parity static-count per-node pipeline.
+
+    ``cfg.sanitize`` (default on) zeroes non-finite candidate rows and
+    demotes their edges to invalid before ANY statistic, on every
+    backend — corrupted payloads degrade to rejected slots instead of
+    poisoning the median (a no-op on finite inputs).  On the static
+    reference path (``valid=None``, dispatch is trace-time) the zeroed
+    row participates as a finite zero candidate instead.
     """
     N, K = neighbor_idx.shape
     valid_b = jnp.ones((N, K), dtype=bool) if valid is None else valid.astype(bool)
     temporal = cfg.use_temporal and state is not None
     matrix_prev = temporal and state.prev.ndim == 2
+    if prev_idx is not None and not matrix_prev:
+        prev_idx = None        # nothing matrix-formed to re-key
+    if cfg.sanitize:
+        finite = jnp.isfinite(models).all(axis=-1)
+        models = jnp.where(finite[:, None], models, 0.0)
+        valid_b = valid_b & finite[neighbor_idx]
+        if temporal:
+            pf = jnp.isfinite(state.prev).all(axis=-1)
+            state = state._replace(
+                prev=jnp.where(pf[..., None], state.prev, 0.0))
     prev = state.prev if temporal else None
 
     if cfg.backend == "reference":
         if valid is not None:
             return _wfagg_batch_indexed_reference_valid(
-                local, models, state, cfg, neighbor_idx, valid_b)
+                local, models, state, cfg, neighbor_idx, valid_b, prev_idx)
         gathered = models[neighbor_idx]
         if state is not None:
-            edge_state = (state._replace(prev=state.prev[neighbor_idx])
+            edge_state = (state._replace(prev=state.prev[
+                neighbor_idx if prev_idx is None else prev_idx])
                           if matrix_prev else state)
             out, new_state, info = jax.vmap(
                 lambda l, u, s: wfagg(l, u, s, cfg))(local, gathered, edge_state)
@@ -520,8 +553,9 @@ def _wfagg_batch_indexed(
     if cfg.backend == "fused_two_launch":
         # the Alt-WFAgg (K, K) Gram rides along in the SAME kernel pass,
         # accumulated from the resident candidate tile — no extra read
-        stats = robust_stats_indexed(models, neighbor_idx, valid, prev=prev,
-                                     need_gram=_needs_gram(cfg))
+        stats = robust_stats_indexed(
+            models, neighbor_idx, valid_b if cfg.sanitize else valid,
+            prev=prev, need_gram=_needs_gram(cfg), prev_idx=prev_idx)
         mask_d, mask_c, mask_t, weights, new_state = _indexed_scoring(
             stats, valid_b, state, cfg, models, neighbor_idx)
         # gather-free WFAgg-E combine: neighbor rows DMA'd by the same table
@@ -538,7 +572,9 @@ def _wfagg_batch_indexed(
                 lambda hs, hb, c, tt: trust.temporal_bands(hs, hb, c, tt, cfg)
             )(state.hist_s, state.hist_b, state.count, state.t)
         out, weights, mask_d, mask_c, mask_t, stats = wfagg_round_indexed(
-            local, models, neighbor_idx, valid, cfg, prev=prev, tbands=tbands)
+            local, models, neighbor_idx,
+            valid_b if cfg.sanitize else valid, cfg,
+            prev=prev, tbands=tbands, prev_idx=prev_idx)
         new_state = state
         if temporal:
             new_state = _push_temporal_history(
@@ -565,6 +601,7 @@ def _wfagg_batch_indexed_reference_valid(
     cfg: WFAggConfig,
     neighbor_idx: Array,
     valid_b: Array,
+    prev_idx: Optional[Array] = None,
 ) -> Tuple[Array, Optional[TemporalState], dict]:
     """Valid-aware pure-jnp reference pipeline: the oracle for irregular
     and dynamic (padded, possibly degree-0) topologies.
@@ -580,7 +617,8 @@ def _wfagg_batch_indexed_reference_valid(
     temporal = cfg.use_temporal and state is not None
     prev = state.prev if temporal else None
     stats = robust_stats_indexed_ref(models, neighbor_idx, valid_b, prev,
-                                     need_gram=_needs_gram(cfg))
+                                     need_gram=_needs_gram(cfg),
+                                     prev_idx=prev_idx)
     mask_d, mask_c, mask_t, weights, new_state = _indexed_scoring(
         stats, valid_b, state, cfg, models, neighbor_idx)
     gathered = models[neighbor_idx].astype(jnp.float32)

@@ -46,6 +46,12 @@ All generators are deterministic in (topology, rounds, seed) and
 composable through ``schedule_from_adjacencies`` — hand-build any
 (R, N, N) adjacency stack + (R, N) malicious stack for conditions not
 listed here.
+
+The TRANSPORT faults — what happens to a payload on an edge that does
+exist (drop, stale delivery, duplication, bit-corruption, crash-restart)
+— live one layer down in ``repro.dfl.faults`` and compose with any
+schedule built here through the valid mask; ``make_faulty_schedule``
+pairs the two in one call (docs/FAULTS.md).
 """
 from __future__ import annotations
 
@@ -62,7 +68,7 @@ from repro.core.topology import (
 )
 
 __all__ = [
-    "SCENARIOS", "SCENARIO_NAMES", "make_schedule",
+    "SCENARIOS", "SCENARIO_NAMES", "make_schedule", "make_faulty_schedule",
     "churn_schedule", "link_failure_schedule", "partition_schedule",
     "mobility_schedule", "sleeper_schedule", "static_schedule",
     "eclipse_schedule", "dos_schedule", "collusion_schedule",
@@ -292,3 +298,30 @@ def make_schedule(name: str, topo: Topology, rounds: int,
     if name == "static":
         return static_schedule(topo, rounds, **params)
     return SCENARIOS[name](topo, rounds, seed=seed, **params)
+
+
+def make_faulty_schedule(scenario: str, topo: Topology, rounds: int,
+                         fault: str = "chaos", intensity: float = 0.3,
+                         seed: int = 0, fault_seed: int = 0,
+                         fault_config=None, **params):
+    """One-call chaos pairing: ``(TopologySchedule, FaultSchedule)``.
+
+    The topology layer decides which edges EXIST each round (this
+    module); the transport layer (``repro.dfl.faults``) decides what
+    happens to the payloads riding the edges that do — drop, stale
+    delivery, duplication, bit-corruption, crash-restart.  The two
+    compose through the valid mask: a fault schedule is generated
+    against a topology schedule's shape and the engine ANDs fault
+    delivery into ``valid`` inside the scan, so ``make_schedule(...)``
+    plus ``faults.make_fault_schedule(...)`` is all this is — one
+    deterministic call for the chaos matrix and the tests.  ``params``
+    go to the scenario generator; pick the fault kind's knobs (lag
+    depth, restart probability, ...) via ``fault_config`` /
+    ``faults.FAULTS``.
+    """
+    from repro.dfl import faults as flt
+
+    sched = make_schedule(scenario, topo, rounds, seed=seed, **params)
+    fs = flt.make_fault_schedule(fault, sched, intensity, seed=fault_seed,
+                                 config=fault_config)
+    return sched, fs

@@ -39,6 +39,7 @@ from repro.core import trust
 from repro.core import wfagg as wf
 from repro.core.topology import Topology, TopologySchedule
 from repro.data.synthetic import SyntheticImages
+from repro.dfl import faults as flt
 from repro.obs import decision as obs_decision
 from repro.models.lenet import init_lenet, init_mlp_classifier, lenet_fwd, mlp_classifier_fwd
 
@@ -317,7 +318,8 @@ def _aggregate_one_dyn(cfg: DFLConfig, local: Array, updates: Array,
 # ---------------------------------------------------------------------------
 
 def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
-                   dynamic: bool = False, telemetry: bool = False) -> Callable:
+                   dynamic: bool = False, telemetry: bool = False,
+                   faults: Optional[flt.FaultConfig] = None) -> Callable:
     """One jitted DFL round.
 
     ``dynamic=False`` (default): returns ``round_fn(state)`` closed over
@@ -353,6 +355,10 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
         raise NotImplementedError(
             "telemetry records per-EDGE gossip verdicts; the CFL "
             "baseline has one server and no edges")
+    if faults is not None and not dynamic:
+        raise NotImplementedError(
+            "fault injection rides the dynamic round form (traced "
+            "per-round inputs); pass dynamic=True")
     if dynamic:
         if cfg.centralized:
             raise NotImplementedError("dynamic schedules are a gossip "
@@ -365,7 +371,8 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
                 "gather-free path or the DYN_AGGREGATORS baselines")
         # any wfagg backend works here: the fused paths AND the reference
         # oracle all honor per-round valid masks (dynamic keep counts)
-        return jax.jit(_make_round_core(cfg, data, telemetry=telemetry))
+        return jax.jit(_make_round_core(cfg, data, telemetry=telemetry,
+                                        faults=faults))
 
     neighbor_idx = jnp.asarray(topo.neighbor_indices)  # (N, K) padded
     # None on regular graphs: the indexed kernels then skip the mask and
@@ -387,12 +394,22 @@ def build_round_fn(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
 
 
 def _make_round_core(cfg: DFLConfig, data: SyntheticImages,
-                     telemetry: bool = False) -> Callable:
+                     telemetry: bool = False,
+                     faults: Optional[flt.FaultConfig] = None) -> Callable:
     """The round body, parameterized by the per-round topology inputs.
     With ``telemetry`` the body returns ``(DFLState, DecisionRecord)``;
     the record is derived from the masks/weights the aggregation already
     produced (baselines get :func:`repro.obs.record_uniform` — accepted
-    = valid, no filter bits)."""
+    = valid, no filter bits).
+
+    With ``faults`` (a :class:`repro.dfl.faults.FaultConfig`) the body is
+    the CHAOS round: it additionally takes the scan-carried
+    ``TransportState`` and the round's ``FaultRound`` surface, routes the
+    gossip through :func:`repro.dfl.faults.apply_transport` (drop / stale
+    / duplicate / corrupt / crash re-keying over the stacked ring
+    matrix), and returns ``(DFLState, TransportState[, record])``."""
+    if faults is not None:
+        return _make_chaos_round_core(cfg, data, telemetry, faults)
 
     def round_core(state: DFLState, neighbor_idx: Array,
                    neighbor_valid: Optional[Array],
@@ -477,6 +494,123 @@ def _make_round_core(cfg: DFLConfig, data: SyntheticImages,
         if telemetry:
             return new_state, record
         return new_state
+
+    return round_core
+
+
+def _make_chaos_round_core(cfg: DFLConfig, data: SyntheticImages,
+                           telemetry: bool, fcfg: flt.FaultConfig) -> Callable:
+    """The fault-injected round body (see ``_make_round_core``).
+
+    Differences from the clean round, in execution order:
+      * crash freeze — a down node neither trains nor transmits: its
+        model row and momentum are held at last round's values, and its
+        own slate is all-invalid (it keeps its local model);
+      * transport — :func:`repro.dfl.faults.apply_transport` re-keys the
+        neighbor table over the sanitized stacked ring matrix (fresh /
+        stale / corrupt-bank rows), yielding the effective table, the
+        surviving valid mask, and the WFAgg-T ``prev_idx`` staleness
+        re-keying;
+      * history hygiene — an edge with NO accepted delivery this round
+        re-centers its WFAgg-T band at the pre-round EWMA mean instead
+        of recording a metric against a payload it never saw.
+
+    Everything is pure traced jnp on scan-carried state: no host
+    transfer, no extra kernel launch, no (N, K, d) tensor on the
+    wfagg/alt_wfagg path (the ``chaos_scan`` lint entry pins all three).
+    """
+    if cfg.centralized:
+        raise NotImplementedError("fault injection is a gossip (decentral"
+                                  "ized) feature; CFL has no transport")
+    if cfg.mesh_model_shards > 1:
+        raise NotImplementedError(
+            "chaos transport + model-dim sharding: the stacked ring "
+            "matrix is not sharded yet (see docs/FAULTS.md)")
+
+    def round_core(state: DFLState, neighbor_idx: Array,
+                   neighbor_valid: Optional[Array], mal_mask: Array,
+                   ts: flt.TransportState, fr: flt.FaultRound):
+        prev_flat, _ = _ravel_nodes(state.node_params)
+        params, momentum = _local_train(
+            cfg, data, mal_mask, state.node_params, state.node_momentum,
+            state.rnd
+        )
+        flat, unravel_one = _ravel_nodes(params)
+        view = _defense_view(cfg, state, neighbor_idx, neighbor_valid)
+        flat = _apply_attacks(cfg, mal_mask, flat, state.rnd, view)
+        # crash freeze: a down node broadcasts (and keeps) its stored
+        # model; its training step and momentum advance are discarded
+        down = fr.down.astype(bool)
+        flat = jnp.where(down[:, None], prev_flat, flat)
+        momentum = jax.tree.map(
+            lambda old, new: jnp.where(
+                down.reshape((-1,) + (1,) * (new.ndim - 1)), old, new),
+            state.node_momentum, momentum)
+
+        valid = (neighbor_valid if neighbor_valid is not None
+                 else jnp.ones(neighbor_idx.shape, bool))
+        tout = flt.apply_transport(flat, ts, neighbor_idx, valid, fr, fcfg,
+                                   state.rnd)
+
+        record = None
+        if cfg.aggregator in ("wfagg", "alt_wfagg"):
+            wcfg = _wfagg_full_config(cfg, neighbor_idx.shape[1])
+            t_in = state.temporal
+            mu_s = mu_b = None
+            matrix_prev = t_in is not None and t_in.prev.ndim == 2
+            if matrix_prev:
+                if wcfg.use_temporal:
+                    # pre-round EWMA centers: the hygiene value a no-
+                    # delivery edge pushes instead of a garbage metric
+                    mu_s, _ = jax.vmap(
+                        lambda h, c: trust.ewma_mean_std(h, c, wcfg.ewma_decay)
+                    )(t_in.hist_s, t_in.count)
+                    mu_b, _ = jax.vmap(
+                        lambda h, c: trust.ewma_mean_std(h, c, wcfg.ewma_decay)
+                    )(t_in.hist_b, t_in.count)
+                # the carried (N, d) prev is superseded by the stacked
+                # matrix + prev_idx (the payload each edge ACTUALLY
+                # served last round, aged one round)
+                t_in = t_in._replace(prev=tout.full)
+            new_flat, new_temporal, info = wf.wfagg_batch(
+                flat, tout.full, t_in, wcfg,
+                neighbor_idx=tout.eff_idx, valid=tout.eff_valid,
+                prev_idx=tout.prev_idx)
+            if matrix_prev and new_temporal is not None:
+                hist_s, hist_b = new_temporal.hist_s, new_temporal.hist_b
+                if mu_s is not None:
+                    hist_s = hist_s.at[:, 0, :].set(
+                        jnp.where(tout.eff_valid, hist_s[:, 0, :], mu_s))
+                    hist_b = hist_b.at[:, 0, :].set(
+                        jnp.where(tout.eff_valid, hist_b[:, 0, :], mu_b))
+                new_temporal = new_temporal._replace(
+                    prev=flat, hist_s=hist_s, hist_b=hist_b)
+            if telemetry:
+                record = obs_decision.record_from_info(info)
+        else:
+            # baselines gather (they already do on the dynamic path);
+            # the valid-aware variants see the post-fault slate
+            gathered = tout.full[tout.eff_idx]
+            new_flat = jax.vmap(
+                lambda loc, upd, v: _aggregate_one_dyn(cfg, loc, upd, v)
+            )(flat, gathered, tout.eff_valid)
+            new_temporal = None
+            if telemetry:
+                record = obs_decision.record_uniform(tout.eff_valid)
+        if telemetry:
+            record = obs_decision.with_fault_bits(
+                record, tout.dropped, tout.stale, tout.corrupt)
+
+        # a down receiver aggregates nothing (its slate is all-invalid so
+        # this is already true on the wfagg path; make it explicit)
+        new_flat = jnp.where(down[:, None], prev_flat, new_flat)
+        new_params = jax.vmap(unravel_one)(new_flat)
+        new_ts = flt.advance_ring(ts, flat, tout.served_lag)
+        new_state = DFLState(new_params, momentum, new_temporal,
+                             state.rnd + 1)
+        if telemetry:
+            return new_state, new_ts, record
+        return new_state, new_ts
 
     return round_core
 
@@ -626,7 +760,8 @@ def run_experiment(cfg: DFLConfig, topo: Topology, data: SyntheticImages,
 def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
                           data: SyntheticImages,
                           schedule: TopologySchedule,
-                          n_test: int = 256, telemetry: bool = False):
+                          n_test: int = 256, telemetry: bool = False,
+                          faults: Optional[flt.FaultSchedule] = None):
     """The ONE-jit schedule scan behind ``run_dynamic_experiment``.
 
     Returns ``(state, run, sched)``: the initial state, the jitted
@@ -642,6 +777,15 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
     record is a pure traced output of masks the round already computes:
     no host callback enters the scan body (the ``dynamic_scan_telemetry``
     lint entry pins launch count and the no-host-transfer rule).
+
+    ``faults`` (a :class:`repro.dfl.faults.FaultSchedule`) switches to
+    the CHAOS form: the first return value becomes the full scan CARRY
+    ``(state, prev_idx, prev_val, TransportState)``, ``run(carry,
+    neighbor_idx, valid, malicious, drop, lag, dup, corrupt, down)``
+    takes that carry explicitly and returns the FINAL carry (so a
+    checkpointed run can stop and resume mid-schedule; see
+    train/checkpoint.py and docs/FAULTS.md), and ``sched`` grows the
+    five fault stacks.  Still one jit, one scan, one compile.
     """
     if schedule.n_nodes != topo.n_nodes:
         raise ValueError(
@@ -649,7 +793,8 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
             f"{topo.n_nodes}")
     state = init_dfl_state(cfg, topo, degree=schedule.width)
     round_core = build_round_fn(cfg, topo, data, dynamic=True,
-                                telemetry=telemetry)
+                                telemetry=telemetry,
+                                faults=faults.config if faults else None)
     _, fwd = _model_fns(cfg)
     imgs, labels = data.test_set(n_test)
     sched = (jnp.asarray(schedule.neighbor_idx),
@@ -661,6 +806,57 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
     # ATTACK side), but its own stored model is still attacker state and
     # must not dilute the benign accuracy/consistency series.
     ever_mal = jnp.asarray(schedule.malicious.any(axis=0))
+
+    def eval_out(st):
+        accs = jax.vmap(
+            lambda p: met.micro_accuracy(fwd(p, imgs), labels)
+        )(st.node_params)
+        benign = ~ever_mal
+        bw = benign.astype(jnp.float32)
+        acc_benign = jnp.sum(accs * bw) / jnp.maximum(bw.sum(), 1.0)
+        flat, _ = _ravel_nodes(st.node_params)
+        return (accs, acc_benign, met.r_squared(flat, weights=bw))
+
+    if faults is not None:
+        if faults.rounds != schedule.rounds:
+            raise ValueError(
+                f"fault schedule has {faults.rounds} rounds, topology "
+                f"schedule has {schedule.rounds}")
+        flat0, _ = _ravel_nodes(state.node_params)
+        ts0 = flt.init_transport_state(
+            faults.config, topo.n_nodes, schedule.width, flat0.shape[1])
+        sched = sched + faults.xs()
+
+        @jax.jit
+        def run_chaos(carry, neighbor_idx, valid, malicious,
+                      drop, lag, dup, corrupt, down):
+            def body(carry, xs):
+                st, prev_idx, prev_val, ts = carry
+                idx, val, mal = xs[:3]
+                fr = flt.FaultRound(*xs[3:])
+                if st.temporal is not None:
+                    st = st._replace(temporal=wf.realign_temporal_history(
+                        st.temporal, prev_idx, prev_val, idx, val))
+                # the served-lag table is slot-keyed like the temporal
+                # history: re-key it to this round's slate too
+                ts = ts._replace(served_lag=flt.realign_served_lag(
+                    ts.served_lag, prev_idx, prev_val, idx, val))
+                if telemetry:
+                    st, ts, record = round_core(st, idx, val, mal, ts, fr)
+                else:
+                    st, ts = round_core(st, idx, val, mal, ts, fr)
+                out = eval_out(st)
+                if telemetry:
+                    out = out + (record,)
+                return (st, idx, val, ts), out
+            carry, out = jax.lax.scan(
+                body, carry,
+                (neighbor_idx, valid, malicious, drop, lag, dup, corrupt,
+                 down))
+            return carry, out
+
+        carry0 = (state, sched[0][0], sched[1][0], ts0)
+        return carry0, run_chaos, sched
 
     @jax.jit
     def run(state, neighbor_idx, valid, malicious):
@@ -678,14 +874,7 @@ def build_dynamic_scan_fn(cfg: DFLConfig, topo: Topology,
                 st, record = round_core(st, idx, val, mal)
             else:
                 st = round_core(st, idx, val, mal)
-            accs = jax.vmap(
-                lambda p: met.micro_accuracy(fwd(p, imgs), labels)
-            )(st.node_params)
-            benign = ~ever_mal
-            bw = benign.astype(jnp.float32)
-            acc_benign = jnp.sum(accs * bw) / jnp.maximum(bw.sum(), 1.0)
-            flat, _ = _ravel_nodes(st.node_params)
-            out = (accs, acc_benign, met.r_squared(flat, weights=bw))
+            out = eval_out(st)
             if telemetry:
                 out = out + (record,)
             return (st, idx, val), out
@@ -703,7 +892,12 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
                            data: SyntheticImages,
                            schedule: TopologySchedule,
                            n_test: int = 256,
-                           telemetry: bool = False) -> Dict[str, Any]:
+                           telemetry: bool = False,
+                           faults: Optional[flt.FaultSchedule] = None,
+                           stop_after: Optional[int] = None,
+                           checkpoint_dir: Optional[str] = None,
+                           checkpoint_name: str = "chaos",
+                           resume_from: Optional[str] = None) -> Dict[str, Any]:
     """Run a DFL experiment under a round-varying topology schedule.
 
     ONE jit: ``lax.scan`` over the (R, N, K) neighbor-table / valid-mask
@@ -722,38 +916,93 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
     time series joined into ``series``.  Model trajectories are
     bit-identical with telemetry on or off (the record only READS masks
     the round already computes).
+
+    Chaos transport (``faults``, a ``repro.dfl.faults.FaultSchedule``):
+    the scan additionally consumes the per-round fault surface and
+    carries the delivery ring (see docs/FAULTS.md).  Fault runs are
+    CHECKPOINTABLE: ``stop_after=r`` runs only rounds [0, r) and — with
+    ``checkpoint_dir`` — snapshots the full scan carry (models,
+    momentum, WFAgg-T ring buffers, transport ring, round counter; the
+    in-scan PRNG streams all derive from the carried round counter) plus
+    the in-flight topology + fault schedules via ``train/checkpoint.py``.
+    ``resume_from=dir`` restores that snapshot and runs the REMAINING
+    rounds, reproducing the uninterrupted trajectory bit-exactly (use a
+    ``make_fault_schedule("none", ...)`` schedule to checkpoint a
+    fault-free run).  ``out["rounds_run"]`` records the [start, end)
+    window a partial run covered.
     """
+    if (stop_after is not None or resume_from is not None
+            or checkpoint_dir is not None) and faults is None:
+        raise NotImplementedError(
+            "checkpoint/resume rides the chaos scan form (the run "
+            "function must return its carry); pass faults="
+            "make_fault_schedule('none', schedule, 0.0) for a "
+            "fault-free checkpointable run")
     state, run, sched = build_dynamic_scan_fn(cfg, topo, data, schedule,
                                               n_test=n_test,
-                                              telemetry=telemetry)
+                                              telemetry=telemetry,
+                                              faults=faults)
     ever_mal = jnp.asarray(schedule.malicious.any(axis=0))
     record = None
-    if telemetry:
-        state, (acc_all, acc_benign, r2, record) = run(state, *sched)
+    R = schedule.rounds
+    r0, r_end = 0, R
+    if faults is None:
+        if telemetry:
+            state, (acc_all, acc_benign, r2, record) = run(state, *sched)
+        else:
+            state, (acc_all, acc_benign, r2) = run(state, *sched)
     else:
-        state, (acc_all, acc_benign, r2) = run(state, *sched)
+        from repro.train import checkpoint as ckpt
+        carry = state
+        if resume_from is not None:
+            # the snapshot carries the schedules too: the resumed scan
+            # replays the IN-FLIGHT fault surface, not a reconstruction
+            carry, sched, meta = ckpt.restore_experiment_checkpoint(
+                resume_from, checkpoint_name, carry, sched)
+            r0 = int(meta["round"])
+        r_end = R if stop_after is None else int(stop_after)
+        if not r0 < r_end <= R:
+            raise ValueError(
+                f"round window [{r0}, {r_end}) is empty or exceeds the "
+                f"{R}-round schedule")
+        xs = tuple(a[r0:r_end] for a in sched)
+        if telemetry:
+            carry, (acc_all, acc_benign, r2, record) = run(carry, *xs)
+        else:
+            carry, (acc_all, acc_benign, r2) = run(carry, *xs)
+        state = carry[0]
+        if checkpoint_dir is not None:
+            ckpt.save_experiment_checkpoint(
+                checkpoint_dir, checkpoint_name, carry, sched,
+                metadata={"round": r_end, "rounds_total": R,
+                          "fault_config":
+                              dataclasses.asdict(faults.config),
+                          "fault_summary": faults.summary()})
     acc_all = np.asarray(acc_all)
     acc_benign = np.asarray(acc_benign)
     r2 = np.asarray(r2)
-    R = schedule.rounds
     trace = [{
-        "round": r + 1,
-        "acc_benign_mean": float(acc_benign[r]),
-        "r_squared": float(r2[r]),
-        "acc_all": acc_all[r].tolist(),
-    } for r in range(R)]
+        "round": r0 + i + 1,
+        "acc_benign_mean": float(acc_benign[i]),
+        "r_squared": float(r2[i]),
+        "acc_all": acc_all[i].tolist(),
+    } for i in range(r_end - r0)]
     # full evaluation (incl. malicious-neighbor buckets) under the FINAL
     # round's graph, with the ever-malicious cohort (same n_test as the
     # in-scan series, so final agrees with trace[-1])
     final = evaluate(cfg, topo, data, state, n_test=n_test,
                      malicious=np.asarray(ever_mal),
-                     adjacency=schedule.adjacency[-1])
-    final["round"] = R
+                     adjacency=schedule.adjacency[r_end - 1])
+    final["round"] = r_end
     series = _series_from_trace(trace)
-    series["degree_min_mean_max"] = schedule.degree_stats().tolist()
+    series["degree_min_mean_max"] = (
+        schedule.degree_stats()[r0:r_end].tolist())
     out = {"trace": trace, "final": final, "series": series,
            "aggregator": cfg.aggregator, "attack": cfg.attack,
            "centralized": cfg.centralized}
+    if faults is not None:
+        out["faults"] = faults.summary()
+        out["rounds_run"] = [r0, r_end]
     if record is not None:
         record = jax.device_get(record)
         series["mean_fallback_count"] = (
@@ -763,6 +1012,6 @@ def run_dynamic_experiment(cfg: DFLConfig, topo: Topology,
         series["accepted_mean"] = [
             float(x) for x in np.asarray(record.accepted).mean(axis=1)]
         out["telemetry"] = _telemetry_out(
-            record, schedule.neighbor_idx, schedule.valid,
-            schedule.malicious)
+            record, schedule.neighbor_idx[r0:r_end],
+            schedule.valid[r0:r_end], schedule.malicious[r0:r_end])
     return out

@@ -273,6 +273,7 @@ def robust_stats_indexed_pallas(
     neighbor_idx: Array,  # (N, K) int32 rows into ``models``
     valid: Array,         # (N, K) float32, 1.0 on real edges
     prev: Array | None = None,   # (N, K, D) per-edge, or (M, D) matrix
+    prev_idx: Array | None = None,  # (N, K) rows into matrix ``prev``
     *,
     block_d: int = 1024,
     interpret: bool | None = None,
@@ -283,8 +284,13 @@ def robust_stats_indexed_pallas(
     and the models input's index map reads it, so each grid step streams
     one neighbor row block straight from the (M, D) matrix.  ``prev`` may
     be per-edge (N, K, D) or a previous-round model matrix (M, D) read
-    through the same index table.  ``need_gram`` also accumulates each
-    node's (K, K) candidate Gram off the same resident tile (Alt-WFAgg).
+    through the same index table — or, with ``prev_idx``, through its OWN
+    (N, K) table (fault-injected transport: the payload an edge served
+    last round need not be the row it reads this round).  The two tables
+    then ride the same SMEM prefetch as one concatenated (N, 2K) block;
+    without ``prev_idx`` the launch is byte-identical to before.
+    ``need_gram`` also accumulates each node's (K, K) candidate Gram off
+    the same resident tile (Alt-WFAgg).
     Returns (dist2, dotmed, norm2, mednorm2[, gram][, prev_dist2,
     prev_dot, prev_norm2]) shaped like the batched launch ((N, 1, K) /
     (N, 1, 1) / (N, K, K)).
@@ -294,6 +300,8 @@ def robust_stats_indexed_pallas(
     assert D % block_d == 0, (D, block_d)
     has_prev = prev is not None
     prev_is_matrix = has_prev and prev.ndim == 2
+    if prev_idx is not None and not prev_is_matrix:
+        raise ValueError("prev_idx requires a matrix-form prev")
     grid = (N, D // block_d, K)
     kernel = functools.partial(
         _robust_stats_indexed_kernel, K=K, has_prev=has_prev,
@@ -305,11 +313,20 @@ def robust_stats_indexed_pallas(
         pl.BlockSpec((1, block_d), lambda n, i, k, ir: (ir[n, k], i)),  # models
     ]
     args = [valid.astype(jnp.float32), models]
+    table = neighbor_idx
     if has_prev:
         if prev_is_matrix:
-            assert prev.shape == models.shape, (prev.shape, models.shape)
-            in_specs.append(
-                pl.BlockSpec((1, block_d), lambda n, i, k, ir: (ir[n, k], i)))
+            assert prev.shape[-1] == models.shape[-1], (prev.shape,
+                                                        models.shape)
+            if prev_idx is not None:
+                assert prev_idx.shape == (N, K), (prev_idx.shape, (N, K))
+                table = jnp.concatenate([neighbor_idx, prev_idx], axis=1)
+                in_specs.append(pl.BlockSpec(
+                    (1, block_d), lambda n, i, k, ir: (ir[n, K + k], i)))
+            else:
+                assert prev.shape == models.shape, (prev.shape, models.shape)
+                in_specs.append(pl.BlockSpec(
+                    (1, block_d), lambda n, i, k, ir: (ir[n, k], i)))
         else:
             assert prev.shape == (N, K, D), (prev.shape, (N, K, D))
             in_specs.append(
@@ -344,7 +361,7 @@ def robust_stats_indexed_pallas(
         grid_spec=grid_spec,
         out_shape=tuple(out_shapes),
         interpret=resolve_interpret(interpret),
-    )(neighbor_idx.astype(jnp.int32), *args)
+    )(table.astype(jnp.int32), *args)
 
 
 def _wfagg_round_indexed_kernel(*refs, K: int, n_d: int, has_prev: bool,
@@ -499,6 +516,7 @@ def wfagg_round_indexed_pallas(
     cfg,                  # duck-typed WFAggConfig (static)
     prev: Array | None = None,    # (N, K, D) per-edge, or (M, D) matrix
     tbands: Array | None = None,  # (N, 4K) flat WFAgg-T EWMA bands
+    prev_idx: Array | None = None,  # (N, K) rows into matrix ``prev``
     *,
     alpha: float,
     mean_fallback: bool = False,
@@ -512,6 +530,11 @@ def wfagg_round_indexed_pallas(
     in-kernel, and phase 1 writes the WFAgg-E combine — one launch for
     the entire gossip round.
 
+    With ``prev_idx`` the matrix-form ``prev`` reads through its own
+    (N, K) table (concatenated after ``neighbor_idx`` into one (N, 2K)
+    SMEM prefetch block) instead of re-using the models table — the
+    fault-injected transport's staleness pricing, still one launch.
+
     Returns (out (N, D), weights, mask_d, mask_c, mask_t (each (N, 1, K)),
     dist2, dotmed, norm2 ((N, 1, K)), mednorm2 ((N, 1, 1))
     [, gram (N, K, K)][, prev_dist2, prev_dot, prev_norm2 ((N, 1, K))]).
@@ -524,6 +547,8 @@ def wfagg_round_indexed_pallas(
     has_prev = prev is not None
     has_tbands = tbands is not None
     prev_is_matrix = has_prev and prev.ndim == 2
+    if prev_idx is not None and not prev_is_matrix:
+        raise ValueError("prev_idx requires a matrix-form prev")
     grid = (N, 2, n_d, K)
     kernel = functools.partial(
         _wfagg_round_indexed_kernel, K=K, n_d=n_d, has_prev=has_prev,
@@ -551,14 +576,26 @@ def wfagg_round_indexed_pallas(
     in_specs.append(
         pl.BlockSpec((1, block_d), lambda n, p, i, k, ir: (ir[n, k], i)))
     args.append(models)
+    table = neighbor_idx
     if has_prev:
         # prev is only read in phase 0: pin the index map to one constant
         # block during phase 1 so the re-walk fetches nothing new
         if prev_is_matrix:
-            assert prev.shape == models.shape, (prev.shape, models.shape)
-            in_specs.append(pl.BlockSpec(
-                (1, block_d),
-                lambda n, p, i, k, ir: (ir[n, k * (1 - p)], i * (1 - p))))
+            if prev_idx is not None:
+                assert prev_idx.shape == (N, K), (prev_idx.shape, (N, K))
+                assert prev.shape[-1] == models.shape[-1], (prev.shape,
+                                                           models.shape)
+                table = jnp.concatenate([neighbor_idx, prev_idx], axis=1)
+                in_specs.append(pl.BlockSpec(
+                    (1, block_d),
+                    lambda n, p, i, k, ir: (ir[n, K + k * (1 - p)],
+                                            i * (1 - p))))
+            else:
+                assert prev.shape == models.shape, (prev.shape, models.shape)
+                in_specs.append(pl.BlockSpec(
+                    (1, block_d),
+                    lambda n, p, i, k, ir: (ir[n, k * (1 - p)],
+                                            i * (1 - p))))
         else:
             assert prev.shape == (N, K, D), (prev.shape, (N, K, D))
             in_specs.append(pl.BlockSpec(
@@ -609,7 +646,7 @@ def wfagg_round_indexed_pallas(
         grid_spec=grid_spec,
         out_shape=tuple(out_shapes),
         interpret=resolve_interpret(interpret),
-    )(neighbor_idx.astype(jnp.int32), *args)
+    )(table.astype(jnp.int32), *args)
 
 
 def robust_stats_batch_pallas(

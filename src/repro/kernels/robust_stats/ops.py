@@ -101,6 +101,7 @@ def robust_stats_indexed(
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
     need_gram: bool = False,
+    prev_idx: Optional[jax.Array] = None,
 ) -> RobustStats:
     """Gather-free batched statistics: ``models (M, d)`` + ``neighbor_idx
     (N, K)`` replace the gathered (N, K, d) tensor — the kernel DMAs each
@@ -116,11 +117,15 @@ def robust_stats_indexed(
     filter bank never reads a d-sized center).  ``need_gram`` also emits
     the per-node (K, K) candidate Gram, accumulated from the SAME
     resident tile — no extra pass, and nothing quadratic in the total
-    node count M (the Alt-WFAgg filters consume it).
+    node count M (the Alt-WFAgg filters consume it).  ``prev_idx (N, K)``
+    points matrix-form ``prev`` reads at rows OTHER than the live
+    neighbor table — the chaos transport's staleness pricing (see
+    dfl/faults.py).
     """
     if not use_kernel:
         return robust_stats_indexed_ref(models, neighbor_idx, valid, prev,
-                                        need_gram=need_gram)
+                                        need_gram=need_gram,
+                                        prev_idx=prev_idx)
     N, K = neighbor_idx.shape
     block_d, itp = resolve_block_d(models.shape[-1], block_d, interpret)
     m = pad_d(models, block_d)
@@ -129,7 +134,7 @@ def robust_stats_indexed(
          else valid.astype(jnp.float32))
     outs = robust_stats_indexed_pallas(
         m, neighbor_idx, v, p, block_d=block_d, interpret=itp,
-        need_gram=need_gram)
+        need_gram=need_gram, prev_idx=prev_idx)
     dist2, dotmed, norm2, mednorm2 = outs[:4]
     rest = outs[4:]
     gram = None
@@ -212,6 +217,7 @@ def wfagg_round_indexed(
     cfg,                       # WFAggConfig (static; sets the filters)
     prev: Optional[jax.Array] = None,    # (N, K, d) or (M, d) matrix
     tbands: Optional[jax.Array] = None,  # (N, 4, K) WFAgg-T EWMA bands
+    prev_idx: Optional[jax.Array] = None,  # (N, K) rows into matrix prev
     alpha: Optional[float] = None,
     mean_fallback: bool = False,
     block_d: Optional[int] = None,
@@ -263,7 +269,7 @@ def wfagg_round_indexed(
     # may exist — the (N, K, d)-free HLO assertions grep by rank)
     tb = tbands.reshape(N, 4 * K) if tbands is not None else None
     outs = wfagg_round_indexed_pallas(
-        loc, m, neighbor_idx, v, cfg, p, tb,
+        loc, m, neighbor_idx, v, cfg, p, tb, prev_idx,
         alpha=float(alpha), mean_fallback=mean_fallback,
         need_gram=trust.needs_gram(cfg), block_d=block_d, interpret=itp)
     out = outs[0][:, :d]

@@ -64,6 +64,7 @@ def robust_stats_indexed_ref(
     valid: Optional[Array] = None,   # (N, K) bool; None = all valid
     prev: Optional[Array] = None,    # (N, K, D) per-edge or (M, D) matrix
     need_gram: bool = False,
+    prev_idx: Optional[Array] = None,  # (N, K) rows into matrix ``prev``
 ) -> RobustStats:
     """Oracle for the gather-free kernel (the oracle MAY gather).
 
@@ -95,7 +96,10 @@ def robust_stats_indexed_ref(
     mednorm2 = jnp.sum(med * med, axis=-1)
     prev_dist2 = prev_dot = prev_norm2 = None
     if prev is not None:
-        pe = (prev[neighbor_idx] if prev.ndim == 2 else prev).astype(jnp.float32)
+        if prev_idx is not None and prev.ndim != 2:
+            raise ValueError("prev_idx requires a matrix-form prev")
+        pidx = neighbor_idx if prev_idx is None else prev_idx
+        pe = (prev[pidx] if prev.ndim == 2 else prev).astype(jnp.float32)
         dp = u - pe
         prev_dist2 = jnp.sum(dp * dp, axis=-1)
         prev_dot = jnp.sum(u * pe, axis=-1)

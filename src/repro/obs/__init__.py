@@ -16,14 +16,19 @@ Three planes, three modules:
 from repro.obs.decision import (  # noqa: F401
     BIT_ACCEPTED,
     BIT_C,
+    BIT_CORRUPT,
     BIT_D,
+    BIT_DROPPED,
+    BIT_STALE,
     BIT_T,
     BIT_VALID,
     BITS,
     DecisionRecord,
+    FAULT_BITS,
     pack_verdict,
     record_from_info,
     record_from_masks,
     record_uniform,
     unpack_verdict,
+    with_fault_bits,
 )

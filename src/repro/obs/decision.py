@@ -18,10 +18,16 @@ that test; a filter *rejection* is ``valid & ~bit``):
     bit 2  BIT_T         accepted by the temporal filter (mask_t)
     bit 3  BIT_VALID     the edge exists this round (padded slates)
     bit 4  BIT_ACCEPTED  final verdict: positive trust weight
+    bit 5  BIT_DROPPED   transport: delivery dropped / over budget
+    bit 6  BIT_STALE     transport: a stale (lag > 0) payload was served
+    bit 7  BIT_CORRUPT   transport: corruption hit the edge's payload
 
-The packing is bool -> uint8 (never through floats), so the
-``f32-trust-invariant`` lint rule — no sub-f32 downcasts of trust-sized
-buffers — is untouched by construction.  See docs/OBSERVABILITY.md.
+Bits 5-7 are the chaos-transport attribution bits (``repro.dfl.faults``)
+— OR'd in by :func:`with_fault_bits` on fault-injected rounds, always 0
+on clean ones.  The packing is bool -> uint8 (never through floats), so
+the ``f32-trust-invariant`` lint rule — no sub-f32 downcasts of
+trust-sized buffers — is untouched by construction.  See
+docs/OBSERVABILITY.md and docs/FAULTS.md.
 """
 from __future__ import annotations
 
@@ -37,9 +43,14 @@ BIT_C = 1 << 1
 BIT_T = 1 << 2
 BIT_VALID = 1 << 3
 BIT_ACCEPTED = 1 << 4
+BIT_DROPPED = 1 << 5
+BIT_STALE = 1 << 6
+BIT_CORRUPT = 1 << 7
 
-#: name -> bit position, for unpacking / reporting
+#: name -> bit position for the five masks :func:`pack_verdict` packs
 BITS = {"mask_d": 0, "mask_c": 1, "mask_t": 2, "valid": 3, "accepted": 4}
+#: transport-attribution bits, OR'd in by :func:`with_fault_bits` only
+FAULT_BITS = {"dropped": 5, "stale": 6, "corrupt": 7}
 
 _EPS = 1e-12
 
@@ -71,9 +82,11 @@ def pack_verdict(mask_d: Array, mask_c: Array, mask_t: Array,
 
 def unpack_verdict(verdict) -> Dict[str, "jnp.ndarray"]:
     """Inverse of :func:`pack_verdict`: name -> boolean array (host side
-    works on numpy arrays too — only >> and & are used)."""
+    works on numpy arrays too — only >> and & are used).  Also unpacks
+    the transport bits (:data:`FAULT_BITS`) — zero unless
+    :func:`with_fault_bits` OR'd them in."""
     return {name: ((verdict >> bit) & 1).astype(bool)
-            for name, bit in BITS.items()}
+            for name, bit in {**BITS, **FAULT_BITS}.items()}
 
 
 def record_from_masks(mask_d: Array, mask_c: Array, mask_t: Array,
@@ -120,6 +133,23 @@ def record_from_info(info: Dict[str, Array],
         valid = jnp.ones(w.shape, bool)
     return record_from_masks(info["mask_d"], info["mask_c"], info["mask_t"],
                              valid, w)
+
+
+def with_fault_bits(record: DecisionRecord, dropped: Array, stale: Array,
+                    corrupt: Array) -> DecisionRecord:
+    """OR the chaos-transport attribution bits into a record's verdict.
+
+    Pure uint8 bit math on the already-packed mask — the summaries are
+    untouched and the model trajectory cannot depend on it (telemetry
+    off skips the whole record).  ``dropped``/``stale``/``corrupt`` are
+    the (…, K) telemetry masks of ``faults.TransportOut``.
+    """
+    u8 = lambda m: m.astype(jnp.uint8)  # noqa: E731 — bool->uint8, no floats
+    verdict = (record.verdict
+               | (u8(dropped) << 5)
+               | (u8(stale) << 6)
+               | (u8(corrupt) << 7))
+    return record._replace(verdict=verdict)
 
 
 def record_uniform(valid: Array) -> DecisionRecord:

@@ -13,7 +13,11 @@ then renders:
 - mean-fallback and degree-0 counts per round (satellite: a node
   silently keeping its local model is now a visible event);
 - the round timeline: compile vs steady wall clock and the achieved
-  bytes/s against the ``memory_passes`` traffic table.
+  bytes/s against the ``memory_passes`` traffic table;
+- on fault-injected logs (verdict bits 5-7 set, see
+  ``repro.dfl.faults`` and docs/FAULTS.md): a per-round
+  dropped/stale/corrupted edge column and a per-fault attribution
+  summary — clean logs render byte-identically to before.
 
 With ``--out-events`` / ``--out-trace`` it writes the JSONL log and the
 Perfetto ``trace_event`` JSON (load at https://ui.perfetto.dev).  The
@@ -29,12 +33,17 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from repro.obs.decision import BITS
+from repro.obs.decision import BITS, FAULT_BITS
 from repro.obs import profile as obs_profile
 from repro.obs import recorder as obs_recorder
 from repro.obs import trace as obs_trace
 
 FILTERS = (("d", "mask_d"), ("c", "mask_c"), ("t", "mask_t"))
+
+#: chaos-transport attribution bits (decision verdict bits 5-7); short
+#: label -> FAULT_BITS key.  Zero on clean runs, so the audit only grows its
+#: fault column when a fault-injected log is being rendered.
+FAULT_KINDS = (("drp", "dropped"), ("stl", "stale"), ("cor", "corrupt"))
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +129,44 @@ def attribution(rates: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
+def fault_rates(verdict: np.ndarray) -> Dict[str, Any]:
+    """Per-round transport-fault rates off the packed verdicts.
+
+    Returns ``{"dropped"|"stale"|"corrupt"|"any": (R,) fraction of slate
+    edges, "counts": {kind: (R,) int}}``.  The denominator is the full
+    N*K slate (not the valid mask): a dropped edge is by definition no
+    longer valid, so rating faults against surviving edges would hide
+    exactly the events being attributed.  All zeros on clean runs —
+    bits 5-7 are only OR'd in by fault-injected rounds
+    (:func:`repro.obs.decision.with_fault_bits`)."""
+    v = np.asarray(verdict, np.uint8)
+    edges = float(v.shape[-1] * v.shape[-2])
+    axes = (-2, -1)
+    out: Dict[str, Any] = {"counts": {}}
+    any_m = np.zeros(v.shape, bool)
+    for _, kind in FAULT_KINDS:
+        m = ((v >> FAULT_BITS[kind]) & 1).astype(bool)
+        any_m |= m
+        out["counts"][kind] = m.sum(axis=axes)
+        out[kind] = m.sum(axis=axes) / edges
+    out["any"] = any_m.sum(axis=axes) / edges
+    return out
+
+
+def fault_attribution(rates: Dict[str, Any]) -> Dict[str, Any]:
+    """Mean per-kind fault rate over the run + the dominant kind (None
+    when the log carries no fault bits at all — i.e. a clean run)."""
+    out: Dict[str, Any] = {}
+    best, best_rate = None, 0.0
+    for _, kind in FAULT_KINDS:
+        mean = float(np.mean(rates[kind]))
+        out[kind] = round(mean, 4)
+        if mean > best_rate:
+            best, best_rate = kind, mean
+    out["dominant"] = best
+    return out
+
+
 def telemetry_rates(telemetry: Dict[str, Any]) -> Dict[str, Any]:
     """:func:`filter_rates` straight off an engine ``out["telemetry"]``
     bundle (run_experiment / run_dynamic_experiment with
@@ -175,6 +222,8 @@ def render_audit(events) -> str:
     valid = ((verdict >> BITS["valid"]) & 1).astype(bool)
     rates = filter_rates(verdict, nidx, valid, mal)
     attr = attribution(rates)
+    frates = fault_rates(verdict)
+    has_faults = bool(np.any(frates["any"] > 0))
     wall = {e["round"]: e for e in events if e.get("type") == "round_timing"}
     acc = {e["round"]: e["acc_benign_mean"] for e in events
            if e.get("type") == "round_eval"}
@@ -192,6 +241,7 @@ def render_audit(events) -> str:
                  + "".join(f"{f.upper() + ' tc/fp':>16s}" for f, _ in FILTERS)
                  + f"{'FINAL tc/fp':>16s}"
                  + f"{'fallbk':>7s}{'deg0':>5s}"
+                 + (f"{'drp/stl/cor':>13s}" if has_faults else "")
                  + f"{'acc%':>7s}{'ms':>9s}")
     for r, dec in enumerate(decisions, start=1):
         row = f"{r:5d} {int(rates['n_attacker_edges'][r-1]):6d}/"
@@ -202,6 +252,10 @@ def render_audit(events) -> str:
             row += f" {_pct(tc)}/{_pct(fp).strip():>5s}"
         row += f"{int(np.sum(dec['mean_fallback'])):7d}"
         row += f"{int(np.sum(dec['degree_zero'])):5d}"
+        if has_faults:
+            cts = frates["counts"]
+            cell = "/".join(str(int(cts[k][r - 1])) for _, k in FAULT_KINDS)
+            row += f"{cell:>13s}"
         row += (f"{100 * acc[r]:7.2f}" if r in acc else f"{'--':>7s}")
         w = wall.get(r)
         row += (f"{1e3 * w['wall_s']:9.1f}" if w else f"{'--':>9s}")
@@ -222,6 +276,15 @@ def render_audit(events) -> str:
                  + (attr["carried_by"].upper() if attr["carried_by"]
                     else "none (no filter beat its false-positive rate — "
                          "transient, or no attacker present)"))
+
+    if has_faults:
+        fattr = fault_attribution(frates)
+        lines.append("")
+        lines.append("transport-fault attribution (mean % of slate edges "
+                     "per round, docs/FAULTS.md):")
+        lines.append("  " + "  ".join(
+            f"{kind} {100 * fattr[kind]:5.2f}%" for _, kind in FAULT_KINDS)
+            + f"  dominant: {fattr['dominant'] or 'none'}")
 
     prof = next((e for e in events if e.get("type") == "profile"), None)
     if prof is not None:

@@ -58,3 +58,51 @@ def restore_checkpoint(directory: str, name: str, like) -> Tuple[Any, Dict]:
     ]
     leaves = [jax.numpy.asarray(data[k]).astype(l.dtype) for k, l in zip(paths, leaves_like)]
     return treedef.unflatten(leaves), manifest["metadata"]
+
+
+def load_metadata(directory: str, name: str) -> Dict:
+    """Read a checkpoint's user metadata without touching the arrays."""
+    with open(os.path.join(directory, f"{name}.json")) as f:
+        return json.load(f)["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# dynamic-experiment snapshots (chaos transport crash-exact resume)
+# ---------------------------------------------------------------------------
+# One snapshot = the dynamic scan's full carry (per-node models +
+# momentum pytrees, the WFAgg-T temporal ring buffers, the transport
+# delivery ring + served-lag table, the previous-round slate, and the
+# round counter — every in-scan PRNG stream is derived from that
+# counter, so the keys need no separate blob) PLUS the in-flight
+# topology + fault schedule stacks.  Restoring both and re-entering the
+# scan at the recorded round reproduces the uninterrupted trajectory
+# bit-exactly; see repro.dfl.engine.run_dynamic_experiment and
+# docs/FAULTS.md.
+
+def save_experiment_checkpoint(directory: str, name: str, carry, sched,
+                               metadata: Optional[Dict] = None) -> str:
+    """Snapshot a dynamic-experiment scan mid-run.
+
+    ``carry`` is whatever the chaos scan carries between rounds;
+    ``sched`` the tuple of full schedule stacks (topology + faults).
+    ``metadata`` must include ``round`` — the number of rounds already
+    run, i.e. where the resumed scan re-enters.
+    """
+    if not metadata or "round" not in metadata:
+        raise ValueError("experiment checkpoints need metadata['round'] "
+                         "(rounds already run) to know where to resume")
+    return save_checkpoint(directory, name,
+                           {"carry": carry, "sched": list(sched)}, metadata)
+
+
+def restore_experiment_checkpoint(directory: str, name: str,
+                                  like_carry, like_sched
+                                  ) -> Tuple[Any, tuple, Dict]:
+    """Inverse of :func:`save_experiment_checkpoint`.
+
+    Returns ``(carry, sched, metadata)`` restored into the structures of
+    ``like_carry`` / ``like_sched`` (build both from the same config +
+    schedules that produced the snapshot)."""
+    tree, meta = restore_checkpoint(
+        directory, name, {"carry": like_carry, "sched": list(like_sched)})
+    return tree["carry"], tuple(tree["sched"]), meta
